@@ -1,0 +1,58 @@
+"""Fig. 7 reproduction: Vanilla vs HO vs HO+VO inference time per model.
+
+Wall-clock on CPU measures the *dataflow* effects that exist on any host:
+per-op dispatch + layout-mismatch transposes (Vanilla) vs DOS-split blocked
+execution (HO) vs linked/fused execution with matched layouts (Xenos).
+The across-unit parallel speedup of HO cannot be wall-clocked on one CPU
+core, so the modeled roofline times (8 DSP units, the paper's TMS320C6678)
+are reported alongside — DESIGN.md §2 records this substitution.
+
+Paper claims being reproduced in-kind: HO 17.9–96.2% reduction,
+VO a further 21.2–84.9%.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import cnn_zoo
+from repro.core import DeviceSpec, Engine, init_params, linking, optimize
+from repro.core.planner import Scheme, model_scheme_time
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    dev = DeviceSpec.tms320c6678()
+    for name in sorted(cnn_zoo.ZOO):
+        g = cnn_zoo.build(name)
+        g_ho = optimize(g, dev, vertical=False)       # HO only
+        g_full = optimize(g, dev)                     # HO + VO
+        params = init_params(g)
+        rng = np.random.default_rng(0)
+        inputs = [jnp.asarray(rng.normal(size=g.tensors[i].shape), jnp.float32)
+                  for i in g.inputs]
+
+        t_van = timeit(Engine(g, "vanilla"), params, *inputs)
+        t_ho = timeit(Engine(g_ho, "ho"), params, *inputs)
+        t_x = timeit(Engine(g_full, "xenos"), params, *inputs)
+
+        # modeled times (8 units): vanilla = 1 unit serial, ho/xenos = 8 units,
+        # xenos additionally drops linked intermediates from memory traffic
+        m_van = model_scheme_time(g, Scheme.single("outC", 1), 1, dev).serial_s
+        m_ho = model_scheme_time(g_ho, Scheme.single("outC", 8), 8, dev).serial_s
+        m_x = model_scheme_time(g_full, Scheme.single("outC", 8), 8, dev,
+                                linked=True).serial_s
+
+        ho_red = 100 * (1 - m_ho / m_van)
+        vo_red = 100 * (1 - m_x / m_ho)
+        emit(f"fig7.{name}.vanilla", t_van, f"modeled_us={m_van*1e6:.1f}")
+        emit(f"fig7.{name}.ho", t_ho,
+             f"modeled_us={m_ho*1e6:.1f};HO_reduction={ho_red:.1f}%")
+        emit(f"fig7.{name}.xenos", t_x,
+             f"modeled_us={m_x*1e6:.1f};VO_further_reduction={vo_red:.1f}%;"
+             f"wallclock_speedup_vs_vanilla={t_van/t_x:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

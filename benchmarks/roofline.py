@@ -1,0 +1,66 @@
+"""Roofline report: reads the dry-run JSONL and prints the §Roofline table.
+
+Deliverable (g): per (arch x shape x mesh) the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the fits-HBM verdict.
+
+    PYTHONPATH=src python -m benchmarks.roofline --in dryrun_production.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from .common import emit
+
+
+def load(path: str) -> list[dict]:
+    recs = {}
+    for line in Path(path).read_text().splitlines():
+        if not line.strip():
+            continue
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return list(recs.values())
+
+
+def run(path: str = "dryrun_production.jsonl") -> None:
+    if not Path(path).exists():
+        print(f"roofline.skipped,0,no_dryrun_file:{path}")
+        return
+    recs = load(path)
+    header = (f"{'arch':24s} {'shape':12s} {'mesh':6s} {'compute_ms':>10s} "
+              f"{'memory_ms':>10s} {'coll_ms':>9s} {'dominant':>10s} "
+              f"{'useful%':>8s} {'peak_GiB':>9s} fits")
+    print("#", header)
+    for r in sorted(recs, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        if "skipped" in r:
+            print(f"# {r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+                  f"SKIP: {r['skipped']}")
+            continue
+        if "error" in r:
+            print(f"# {r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+                  f"ERROR: {r['error'][:80]}")
+            continue
+        c = r.get("calibrated", r)  # depth-calibrated totals when available
+        print(f"# {r['arch']:24s} {r['shape']:12s} {r['mesh']:6s} "
+              f"{c['compute_s']*1e3:10.2f} {c['memory_s']*1e3:10.2f} "
+              f"{c['collective_s']*1e3:9.2f} {c['dominant']:>10s} "
+              f"{100*c['useful_flops_ratio']:8.1f} "
+              f"{r['memory']['peak_estimate']/2**30:9.2f} {r['fits_hbm']}")
+        emit(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+             c["bound_s"],
+             f"dominant={c['dominant']};useful={100*c['useful_flops_ratio']:.1f}%;"
+             f"fits={r['fits_hbm']};"
+             f"{'calibrated' if 'calibrated' in r else 'raw_loop_form'}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="path", default="dryrun_production.jsonl")
+    args = ap.parse_args(argv)
+    run(args.path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table 2 reproduction: automatic-optimization wall time per model.
+
+Paper claim: 0.11–0.91 s on the full-size models; our reduced zoo must be
+well under that, scaling with op count.
+"""
+from __future__ import annotations
+
+from repro.configs import cnn_zoo
+from repro.core import optimize_timed
+
+from .common import emit
+
+
+def run() -> None:
+    for name in sorted(cnn_zoo.ZOO):
+        g = cnn_zoo.build(name)
+        # median of 3 (the pass is deterministic; guard against timer noise)
+        times = []
+        for _ in range(3):
+            _, dt = optimize_timed(g)
+            times.append(dt)
+        times.sort()
+        emit(f"table2.{name}", times[1],
+             f"ops={g.num_ops()};paper_range=0.11-0.91s_full_models")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Checkpointing: flattened-pytree .npz store with step directories.
+
+Layout:  <dir>/step_<n>/arrays.npz  +  manifest (key order & treedef repr).
+Restore rebuilds onto the caller's pytree structure (and target shardings
+can be applied by the caller with jax.device_put).
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(directory: str | Path, step: int, tree) -> Path:
+    d = Path(directory) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    np.savez(d / "arrays.npz", **flat)
+    (d / "manifest.json").write_text(json.dumps(
+        {"step": step, "keys": sorted(flat)}, indent=1))
+    return d
+
+
+def latest_step(directory: str | Path) -> int | None:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    steps = [int(m.group(1)) for p in d.iterdir()
+             if (m := re.fullmatch(r"step_(\d+)", p.name))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str | Path, step: int, like) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays/structs)."""
+    d = Path(directory) / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(_path_str(p) for p in path)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,39 @@
+"""Xenos core: dataflow-centric computation-graph optimization.
+
+Pipeline (paper §3/§4):
+    fuse (Conv+Bn+Relu -> CBR)  ->  link (VO, §4.1)  ->  DOS split (HO, §4.2)
+plus the d-Xenos distributed planner (§5).
+"""
+from __future__ import annotations
+
+import time
+
+from . import costmodel, dos, engine, graph, linking, patterns, planner
+from .dos import DeviceSpec
+from .engine import Engine, execute, init_params
+from .graph import Graph
+
+
+def optimize(g: Graph, device: DeviceSpec | None = None,
+             vertical: bool = True, horizontal: bool = True) -> Graph:
+    """The full automatic optimization workflow (§4.4)."""
+    out = g
+    if vertical:
+        out = linking.optimize(out)
+    if horizontal:
+        out = dos.optimize(out, device)
+    return out
+
+
+def optimize_timed(g: Graph, device: DeviceSpec | None = None) -> tuple[Graph, float]:
+    """Optimization + wall-clock, for the Table-2 reproduction."""
+    t0 = time.perf_counter()
+    out = optimize(g, device)
+    return out, time.perf_counter() - t0
+
+
+__all__ = [
+    "Graph", "Engine", "DeviceSpec", "execute", "init_params", "optimize",
+    "optimize_timed", "graph", "patterns", "linking", "dos", "planner",
+    "costmodel", "engine",
+]

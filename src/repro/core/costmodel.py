@@ -1,0 +1,167 @@
+"""Roofline cost model (TPU v5e target constants).
+
+The paper scores candidate dataflow schemes by on-device profiling
+(Algorithm 1, line 3).  This container is CPU-only, so the profiling oracle
+is replaced by a static three-term roofline model evaluated either over
+
+  * analytic per-op FLOP/byte counts (fast path, used inside the d-Xenos
+    scheme enumeration), or
+  * the compiled HLO of a dry-run (``compiled.cost_analysis()`` +
+    collective-bytes parsed from the HLO text) — the authoritative numbers
+    reported in EXPERIMENTS.md.
+
+Terms (seconds):
+    compute    = FLOPs            / (chips * PEAK_FLOPS)
+    memory     = HBM bytes        / (chips * HBM_BW)
+    collective = collective bytes / (chips * ICI_BW)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# -- TPU v5e hardware constants (per chip) ----------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~ per-chip injection for ring)
+VMEM_BYTES = 128 * 1024**2   # ~128 MB VMEM (the "private L2" analogue)
+HBM_BYTES = 16 * 1024**3     # 16 GB HBM   (the "shared memory" analogue)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_s(self) -> float:
+        """Roofline lower bound on step time (terms overlap perfectly)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_s(self) -> float:
+        """Upper bound (no overlap at all)."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def as_dict(self) -> dict[str, Any]:
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s, "dominant": self.dominant,
+                "bound_s": self.bound_s}
+
+
+def roofline(flops: float, hbm_bytes: float, collective_bytes: float,
+             chips: int = 1) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops / (chips * PEAK_FLOPS),
+        memory_s=hbm_bytes / (chips * HBM_BW),
+        collective_s=collective_bytes / (chips * ICI_BW),
+    )
+
+
+# -- analytic per-op costs (used by the planner fast path) -------------------
+
+def op_flops(node, tensors) -> float:
+    """Approximate FLOPs of one graph op (inference, fp32 count)."""
+    t = node.op_type
+    outs = [tensors[o] for o in node.outputs]
+    out = outs[0]
+    if t in ("conv", "cbr", "cbra", "cbrm"):
+        k = node.attrs.get("ksize", 1)
+        in_c = tensors[node.inputs[0]].shape[-1]
+        # conv MACs * 2; linked pool adds one more pass over the conv output
+        n, oh, ow, oc = _conv_out_shape(node, tensors)
+        f = 2.0 * n * oh * ow * oc * k * k * in_c
+        if t in ("cbra", "cbrm"):
+            f += float(n * oh * ow * oc)
+        return f
+    if t == "dwconv":
+        k = node.attrs.get("ksize", 1)
+        return 2.0 * out.size * k * k
+    if t == "matmul":
+        in_f = tensors[node.inputs[0]].shape[-1]
+        return 2.0 * out.size * in_f
+    if t in ("add", "mul", "bias", "relu", "bn", "softmax"):
+        return float(out.size) * (4.0 if t == "softmax" else 1.0)
+    if t == "gampool":
+        return float(tensors[node.inputs[0]].size)
+    if t == "mac":
+        return 2.0 * out.size
+    return 0.0
+
+
+def op_bytes(node, tensors, linked: bool = False, bytes_per_el: int = 4) -> float:
+    """HBM traffic of one op: read inputs+params, write outputs.
+
+    ``linked=True`` models operator linking: the op's inputs that come from
+    the same link group stay in VMEM, so their HBM read (and the producer's
+    HBM write) is elided.  This is the quantitative content of Figure 4.
+    """
+    read = sum(tensors[i].nbytes(bytes_per_el) for i in node.inputs
+               if not (linked and _same_group_producer(node, i, tensors)))
+    read += sum(tensors[p].nbytes(bytes_per_el) for p in node.params)
+    write = sum(tensors[o].nbytes(bytes_per_el) for o in node.outputs)
+    return float(read + write)
+
+
+def _same_group_producer(node, tensor_name, tensors) -> bool:
+    spec = tensors[tensor_name]
+    return spec.producer is not None and node.dataflow.get("link_group") is not None
+
+
+def _conv_out_shape(node, tensors):
+    out = tensors[node.outputs[0]]
+    if node.op_type in ("cbra", "cbrm"):
+        # output is post-pool; conv output is pre-pool
+        pool_attrs = node.attrs.get("pool", {})
+        s = pool_attrs.get("stride", 2)
+        n, oh, ow, oc = out.shape
+        return n, oh * s, ow * s, oc
+    return out.shape
+
+
+# -- HLO collective parsing ---------------------------------------------------
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*([a-z0-9_\[\]{}, ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|f64|s32|s8|u8|u32|s64|u64|pred|s16|u16)\[([\d,]*)\]")
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2, "u16": 2}
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, float]:
+    """Sum output-shape bytes of every collective op in an HLO dump.
+
+    Returns {collective_kind: bytes, ..., 'total': bytes}.  Uses the result
+    shape (for all-gather that is the gathered size; for all-reduce the
+    reduced tensor) as the per-device traffic proxy — consistent across
+    schemes, which is what the planner needs.
+    """
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.match(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        shape_text = m.group(1)
+        nbytes = 0.0
+        for dm in _SHAPE_RE.finditer(shape_text):
+            dt, dims = dm.group(1), dm.group(2)
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out

@@ -1,0 +1,5 @@
+from .pipeline import (SyntheticLM, TokenFileDataset, audio_batch_stub,
+                       make_train_iterator)
+
+__all__ = ["SyntheticLM", "TokenFileDataset", "make_train_iterator",
+           "audio_batch_stub"]

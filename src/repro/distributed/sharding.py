@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules — the transformer face of DSP-aware operator
+split (paper §4.2).
+
+The paper's priority — partition ``outC`` first (parameters distribute, no
+reduction), ``inH``/``inW`` next (activations/batch), never ``inC`` — maps to:
+
+  outC  -> heads / kv_heads / mlp / experts / vocab / ssm_inner -> "model"
+  inH   -> batch                                                -> ("pod","data")
+  inW   -> sequence                                             -> None (baseline)
+  inC   -> embed (contraction dim)                              -> None (a
+           rule mapping embed->mesh would add an all-reduce per matmul, the
+           exact reduction overhead §4.2.1 dismisses)
+
+Rules are plain dicts logical-axis -> mesh-axis (or None); the d-Xenos
+planner (launch/autotune.py) enumerates rule variants and scores them with
+the compiled roofline, mirroring Algorithm 1.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Rules = dict  # logical axis name -> mesh axis name | tuple | None
+
+BASELINE_RULES: Rules = {
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv": None,
+    "head_dim": None,
+    "layers": None,   # scan axis is never sharded
+}
+
+
+def rules_for(cfg, mesh, overrides: Mapping[str, Any] | None = None) -> Rules:
+    """Baseline DOS rules, adapted to the config and mesh.
+
+    Mirrors §4.2.1's fallback ladder: if an outC-like extent cannot use the
+    full model axis (e.g. chatglm3's kv=2 over 16), the rule keeps the shard
+    (GSPMD pads) — the imbalance is reported by launch/dryrun, and the
+    planner may override.
+    """
+    rules = dict(BASELINE_RULES)
+    rules.update(dict(getattr(cfg, "sharding_overrides", ()) or ()))
+    if overrides:
+        rules.update(overrides)
+    axis_names = set(mesh.axis_names) if mesh is not None else set()
+    for k, v in list(rules.items()):
+        names = v if isinstance(v, tuple) else (v,)
+        if any(n is not None and n not in axis_names for n in names):
+            rules[k] = None
+    return rules
+
+
+#: when an outC-like dim cannot be evenly sharded, DOS falls back down the
+#: §4.2.2 param-split ladder; the final rung is the contraction (inC ≙
+#: embed) dim — the "extra reduction" split the paper deprioritizes but
+#: allows as last resort.
+FALLBACK_AXES = ("embed", "mlp", "ssm_inner")
+
+
+def spec_for_axes(axes: tuple, rules: Rules, shape: tuple | None = None,
+                  mesh=None) -> P:
+    """PartitionSpec for one parameter.
+
+    With ``shape``+``mesh``, enforces divisibility: a mesh axis that does
+    not divide its dim moves down the fallback ladder (another divisible
+    dim with a FALLBACK_AXES logical name), else is dropped (replicated) —
+    the paper's "pad / randomly assign the remainder" adapted to GSPMD's
+    even-sharding requirement for arguments.
+    """
+    parts: list = []
+    used: set = set()
+    pending: list[tuple[int, tuple]] = []   # (dim, mesh axes needing a home)
+
+    def size_of(names: tuple) -> int:
+        n = 1
+        for nm in names:
+            n *= mesh.shape[nm]
+        return n
+
+    for dim, a in enumerate(axes):
+        m = rules.get(a) if a is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        names = tuple(n for n in (m if isinstance(m, tuple) else (m,))
+                      if n is not None and n not in used)
+        if not names:
+            parts.append(None)
+            continue
+        if shape is not None and mesh is not None \
+                and shape[dim] % size_of(names) != 0:
+            parts.append(None)
+            pending.append((dim, names))
+            continue
+        used.update(names)
+        parts.append(names if len(names) > 1 else names[0])
+
+    # fallback ladder for displaced mesh axes
+    for _, names in pending:
+        placed = False
+        for dim, a in enumerate(axes):
+            if parts[dim] is not None or a not in FALLBACK_AXES:
+                continue
+            if shape[dim] % size_of(names) == 0 \
+                    and not any(n in used for n in names):
+                parts[dim] = names if len(names) > 1 else names[0]
+                used.update(names)
+                placed = True
+                break
+        # not placed -> replicated (recorded by launch/dryrun imbalance note)
+    return P(*parts)
+
+
+def param_partition_specs(tree, rules: Rules, mesh=None):
+    """ParamSpec tree (or logical-axes tree) -> PartitionSpec tree."""
+    from repro.models.layers import ParamSpec
+
+    def leaf_fn(x):
+        if isinstance(x, ParamSpec):
+            return spec_for_axes(x.axes, rules, x.shape, mesh)
+        return spec_for_axes(x, rules)
+
+    return jax.tree.map(
+        leaf_fn, tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec) or (
+            isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x)))
+
+
+def param_shardings(axes_tree, mesh, rules: Rules):
+    specs = param_partition_specs(axes_tree, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes_for(mesh, global_batch: int) -> tuple:
+    """Shard the batch over ("pod","data") when divisible; §4.2.1's inH split.
+    Falls back to fewer axes (long_500k batch=1 -> replicated)."""
+    if mesh is None:
+        return ()
+    cands = [a for a in ("pod", "data") if a in mesh.axis_names]
+    while cands:
+        n = 1
+        for a in cands:
+            n *= mesh.shape[a]
+        if global_batch % n == 0:
+            return tuple(cands)
+        cands.pop(0)
+    return ()
+
+
+def activation_spec(batch_axes: tuple, ndim: int, last: Any = None) -> P:
+    """Rank-``ndim`` PartitionSpec: (batch, None, ..., last)."""
+    first = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
+    if ndim == 1:
+        return P(first)
+    return P(first, *([None] * (ndim - 2)), last)

@@ -1,0 +1,157 @@
+"""Sharding trees for non-parameter state: KV caches, SSM caches, optimizer.
+
+Cache sharding follows the DOS ladder (§4.2.1) applied to serving:
+  * outC  -> kv heads / ssm heads over "model";
+  * inH   -> the batch over ("pod","data") when divisible;
+  * inW   -> otherwise the *cache sequence* dim over "data" (context
+    parallelism — this is what makes long_500k's batch=1 shardable).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import batch_axes_for
+
+
+def enforce_divisible(spec: P, shape: tuple, mesh) -> P:
+    """Drop/relocate mesh axes that do not evenly divide their dim (the DOS
+    fallback ladder applied to runtime state — GSPMD requires even argument
+    shards).  A displaced axis moves to the next unsharded dim that divides
+    (e.g. hymba's 5 kv heads push 'model' onto head_dim)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+
+    def size_of(entry) -> int:
+        names = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for nm in names:
+            n *= mesh.shape[nm]
+        return n
+
+    displaced = []
+    for i, entry in enumerate(parts):
+        if entry is None:
+            continue
+        if shape[i] % size_of(entry) != 0:
+            displaced.append(entry)
+            parts[i] = None
+    for entry in displaced:
+        for i in range(len(parts) - 1, 0, -1):   # prefer trailing (feature) dims
+            if parts[i] is None and shape[i] % size_of(entry) == 0 \
+                    and shape[i] > 1:
+                parts[i] = entry
+                break
+    return P(*parts)
+
+
+def cache_partition_specs(cache_abstract, mesh, *, global_batch: int,
+                          seq_shard: bool | None = None,
+                          kv_axis: Any = "model") -> Any:
+    """PartitionSpec tree matching a stacked-LayerCache pytree.
+
+    Leaves are identified by path name (k/v/positions/length/state/conv/
+    cross_k/cross_v); every leaf has a leading layer axis (never sharded).
+    ``seq_shard`` enables context parallelism over the cache sequence dim
+    (the DOS inW fallback — automatic when the batch is unshardable);
+    ``kv_axis`` shards kv heads (None replicates them).
+    """
+    baxes = batch_axes_for(mesh, global_batch)
+    b = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    if seq_shard is None:
+        seq_shard = not baxes and "data" in mesh.axis_names
+    used = set(baxes)
+    s = None
+    if seq_shard:
+        s = next((a for a in ("data", "model") if a not in used), None)
+        if s is not None:
+            used.add(s)
+    if kv_axis in used:
+        kv_axis = None
+    if kv_axis is not None and kv_axis not in getattr(mesh, "axis_names", ()):
+        kv_axis = None
+
+    def spec_of(path, leaf) -> P:
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "name"):
+                name = p.name
+                break
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        nd = leaf.ndim
+        if name in ("k", "v", "cross_k", "cross_v"):   # (L, B, W, K, D)
+            spec = P(None, b, s, kv_axis, None)
+        elif name == "positions":                      # (L, B, W)
+            spec = P(None, b, s)
+        elif name == "length":                         # (L, B)
+            spec = P(None, b)
+        elif name == "state":                          # (L, B, nh, p, n)
+            spec = P(None, b, kv_axis, None, None)
+        elif name == "conv":                           # (L, B, w-1, conv_dim)
+            spec = P(None, b, None, kv_axis)
+        else:
+            spec = P(*([None] * nd))
+        return enforce_divisible(spec, leaf.shape, mesh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    specs = [spec_of(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_partition_specs(opt_abstract, param_specs_tree, mesh) -> Any:
+    """Optimizer-state PartitionSpecs.
+
+    fp32/bf16 moments mirror the parameter sharding (ZeRO-1 for free).
+    int8 blockwise moments are flat (n_blocks, 256)/(n_blocks, 1) arrays:
+    sharded over all mesh axes on dim 0 when divisible (fully-sharded
+    moments), else replicated.
+    """
+    all_axes = tuple(mesh.axis_names)
+    n_all = 1
+    for a in all_axes:
+        n_all *= mesh.shape[a]
+
+    params_flat = jax.tree_util.tree_leaves(
+        param_specs_tree, is_leaf=lambda x: isinstance(x, P))
+
+    def moment_specs(tree):
+        from repro.optim.adamw import QuantMoment
+        is_q = lambda x: isinstance(x, QuantMoment)
+        flat, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_q)
+        if flat and is_q(flat[0]):
+            # int8: q mirrors the param spec exactly; scale drops the
+            # last-dim sharding (it is the per-row absmax)
+            out = []
+            for pspec, qm in zip(params_flat, flat):
+                parts = list(pspec)
+                parts += [None] * (len(qm.shape) - len(parts))
+                sparts = (parts[:-1] + [None]) if parts else [None]
+                out.append(QuantMoment(q=P(*parts), scale=P(*sparts),
+                                       shape=qm.shape))
+            return jax.tree_util.tree_unflatten(treedef, out)
+        if len(flat) == len(params_flat):
+            # same structure as params -> mirror
+            return jax.tree_util.tree_unflatten(treedef, params_flat)
+        specs = []
+        for leaf in flat:
+            if leaf.ndim >= 1 and leaf.shape[0] % n_all == 0:
+                specs.append(P(all_axes, *([None] * (leaf.ndim - 1))))
+            else:
+                specs.append(P(*([None] * leaf.ndim)))
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    return type(opt_abstract)(
+        step=P(),
+        m=moment_specs(opt_abstract.m),
+        v=moment_specs(opt_abstract.v),
+    )
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the compute hot-spots Xenos optimizes.
+
+Each kernel directory holds:
+  * ``<name>.py`` — the pl.pallas_call with explicit BlockSpec VMEM tiling,
+  * ``ops.py``    — the jit'd public wrapper (interpret=True on CPU),
+  * ``ref.py``    — the pure-jnp oracle tests assert against.
+
+Kernels:
+  * linked_matmul    — VO flagship: Matmul->Matmul operator linking (the
+    SwiGLU MLP chain); the hidden activation lives in VMEM only.
+  * linked_cbr_pool  — the paper's CBRA op (Conv1x1+BN+ReLU+AvgPool2x2
+    fused; Figure 4's zigzag write order is the pool-block iteration).
+  * split_matmul     — HO flagship: DOS §4.2.2 parameter split; every
+    weight block is sized to VMEM (K/N/inC-chunked with accumulation).
+  * decode_attention — GQA flash-decode for the serve_step hot loop.
+"""
+
+INTERPRET_DEFAULT = None  # resolved lazily: True on CPU, False on TPU
+
+
+def interpret_mode() -> bool:
+    global INTERPRET_DEFAULT
+    if INTERPRET_DEFAULT is None:
+        import jax
+        INTERPRET_DEFAULT = jax.default_backend() != "tpu"
+    return bool(INTERPRET_DEFAULT)

@@ -1,0 +1,84 @@
+"""GQA flash-decode kernel: one query token vs. a (ring-buffer) KV cache.
+
+Grid: (batch, kv_head, cache_blocks).  The cache-block axis is innermost
+(sequential), carrying the online-softmax running state (max, denominator,
+weighted accumulator) in VMEM scratch — the standard flash-decoding
+decomposition, which is operator linking applied to
+QK^T -> mask -> softmax -> PV: the score block never leaves VMEM.
+
+VMEM per step: bw*D (k block) + bw*D (v block) + G*D (q) + G*bw (scores)
++ scratch (G*D acc, G max/denominator).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, acc_ref, m_ref, l_ref):
+    w = pl.program_id(2)
+    nw = pl.num_programs(2)
+    q = q_ref[0, 0].astype(jnp.float32)         # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)      # (bw, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)      # (bw, D)
+    valid = valid_ref[0]                        # (bw,)
+    D = q.shape[-1]
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / np.sqrt(D)
+    s = jnp.where(valid[None, :], s, NEG_INF)   # (G, bw)
+    m_prev = m_ref[...]                         # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(w == nw - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+               valid: jax.Array, *, block_w: int = 1024,
+               interpret: bool = True) -> jax.Array:
+    """q: (B, H, D); k/v_cache: (B, W, K, D); valid: (B, W) bool.
+    Returns (B, H, D)."""
+    B, H, D = q.shape
+    W, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    bw = min(block_w, W)
+    assert W % bw == 0, (W, bw)
+    qg = q.reshape(B, K, G, D)
+    grid = (B, K, W // bw)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, k, w: (b, k, 0, 0)),
+            pl.BlockSpec((1, bw, 1, D), lambda b, k, w: (b, w, k, 0)),
+            pl.BlockSpec((1, bw, 1, D), lambda b, k, w: (b, w, k, 0)),
+            pl.BlockSpec((1, bw), lambda b, k, w: (b, w)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, k, w: (b, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, valid)
+    return out.reshape(B, H, D)

@@ -1,0 +1,18 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .. import interpret_mode
+from .decode_attention import gqa_decode as _kernel_impl
+from .ref import gqa_decode_ref
+
+
+@partial(jax.jit, static_argnames=("block_w",))
+def gqa_decode(q, k_cache, v_cache, valid, *, block_w: int = 1024):
+    W = k_cache.shape[1]
+    if W % min(block_w, W):
+        return gqa_decode_ref(q, k_cache, v_cache, valid)
+    return _kernel_impl(q, k_cache, v_cache, valid, block_w=block_w,
+                        interpret=interpret_mode())

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for GQA decode attention (mirrors models.attention)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def gqa_decode_ref(q, k_cache, v_cache, valid):
+    B, H, D = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, k_cache).astype(jnp.float32) / np.sqrt(D)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgw,bwkd->bkgd", w, v_cache)
+    return out.reshape(B, H, D).astype(q.dtype)

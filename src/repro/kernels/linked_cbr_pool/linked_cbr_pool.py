@@ -1,0 +1,52 @@
+"""Linked CBR-AvgPool kernel — the paper's ``x.cbra`` op (Figure 4).
+
+Conv1x1 (+folded BN/bias) + ReLU + AvgPool2x2 in ONE pallas_call.  Each grid
+step loads a (2-row, W, C) strip of the input feature map, computes the
+1x1 conv as a (2W, C)@(C, OC) matmul on the MXU, applies bias+ReLU, and
+reduces every 2x2 square to its average *while the conv output is still in
+VMEM* — the paper's zigzag write order.  The pre-pool feature map never
+exists in HBM, which is exactly the locality win Figure 4 illustrates.
+
+VMEM per step: 2*W*C (input strip) + C*OC (weights) + 2*W*OC (conv block)
++ (W/2)*OC (pooled row).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[0]                               # (2, W, C)
+    two, W, C = x.shape
+    y = jnp.dot(x.reshape(2 * W, C), w_ref[...],
+                preferred_element_type=jnp.float32)       # (2W, OC)
+    y = jax.nn.relu(y + b_ref[...].astype(jnp.float32))
+    y = y.reshape(2, W, -1)
+    # avg over the 2x2 squares: rows first, then column pairs (zigzag order)
+    rows = (y[0] + y[1]) * 0.5                 # (W, OC)
+    pooled = (rows[0::2] + rows[1::2]) * 0.5   # (W/2, OC)
+    o_ref[0, 0] = pooled.astype(o_ref.dtype)
+
+
+def cbr_avgpool(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                interpret: bool = True) -> jax.Array:
+    """x: (N, H, W, C) with H, W even; w: (C, OC); b: (OC,).
+    Returns relu(x @ w + b) avg-pooled 2x2 -> (N, H/2, W/2, OC)."""
+    N, H, W, C = x.shape
+    OC = w.shape[1]
+    assert H % 2 == 0 and W % 2 == 0, (H, W)
+    grid = (N, H // 2)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 2, W, C), lambda n, i: (n, i, 0, 0)),
+            pl.BlockSpec((C, OC), lambda n, i: (0, 0)),
+            pl.BlockSpec((OC,), lambda n, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, W // 2, OC), lambda n, i: (n, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, H // 2, W // 2, OC), x.dtype),
+        interpret=interpret,
+    )(x, w, b)

@@ -1,0 +1,17 @@
+from __future__ import annotations
+
+import jax
+
+from .. import interpret_mode
+from .linked_cbr_pool import cbr_avgpool as _kernel_impl
+from .ref import cbr_avgpool_ref
+
+
+@jax.jit
+def cbr_avgpool(x, w, b):
+    N, H, W, C = x.shape
+    if H % 2 or W % 2:
+        return cbr_avgpool_ref(x, w, b)
+    if w.ndim == 4:  # (1,1,C,OC) conv weight layout
+        w = w[0, 0]
+    return _kernel_impl(x, w, b, interpret=interpret_mode())

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: unlinked Conv1x1+BN-folded+ReLU then AvgPool2x2."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def cbr_avgpool_ref(x, w, b):
+    y = jax.nn.relu(jnp.einsum("nhwc,co->nhwo", x, w) + b)
+    s = lax.reduce_window(y, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return (s * 0.25).astype(x.dtype)

@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for the linked MLP kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .. import interpret_mode
+from .linked_matmul import linked_mlp as _kernel_impl
+from .ref import linked_mlp_ref
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_ff"))
+def linked_mlp(x, wg, wu, wd, *, block_m: int = 256, block_ff: int = 512):
+    M, d = x.shape
+    ff = wg.shape[1]
+    if M % min(block_m, M) or ff % min(block_ff, ff):
+        return linked_mlp_ref(x, wg, wu, wd)  # ragged fallback
+    return _kernel_impl(x, wg, wu, wd, block_m=block_m, block_ff=block_ff,
+                        interpret=interpret_mode())

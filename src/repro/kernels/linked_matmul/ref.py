@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the linked Matmul->Matmul kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def linked_mlp_ref(x, wg, wu, wd):
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return (h @ wd).astype(x.dtype)

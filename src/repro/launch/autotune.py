@@ -1,0 +1,84 @@
+"""d-Xenos sharding-rule autotuner (paper §5, Algorithm 1 on transformers).
+
+Enumerates candidate sharding-rule sets (the Figure-6 schemes translated to
+mesh-axis assignments), compiles each with the dry-run machinery, scores by
+the three-term roofline over the compiled HLO (the CPU-container stand-in
+for on-device profiling — DESIGN.md §2), and returns the argmin.
+
+This is also the §Perf hillclimbing harness: each candidate is one
+hypothesis, the roofline delta is the measurement.
+
+    PYTHONPATH=src python -m repro.launch.autotune --arch qwen3-1.7b \
+        --shape decode_32k
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.planner import algorithm1
+from repro.launch import dryrun
+
+
+#: candidate rule overrides, named.  Baseline = {} (the paper-faithful
+#: outC-first DOS rules in distributed/sharding.py).
+CANDIDATE_RULESETS: dict[str, dict] = {
+    "baseline_outC": {},
+    "kv_replicated": {"kv_heads": None},
+    "mlp_on_data": {"mlp": "data"},
+    "embed_fsdp": {"embed": "data"},
+    "vocab_replicated": {"vocab": None},
+    "experts_2d": {"expert_mlp": "data"},
+    "heads_replicated": {"heads": None, "kv_heads": None, "mlp": "model"},
+}
+
+
+def score(arch: str, shape: str, mesh_name: str, rules: dict) -> dict:
+    mesh = dryrun.build_mesh(multi_pod=(mesh_name == "multi"))
+    lowered, compiled, model, _ = dryrun.lower_one(arch, shape, mesh,
+                                                   rules or None)
+    return dryrun.analyze(arch, shape, mesh_name, lowered, compiled, model)
+
+
+def tune(arch: str, shape: str, mesh_name: str = "single",
+         rulesets: dict[str, dict] | None = None,
+         objective: str = "bound_s") -> tuple[str, dict[str, dict]]:
+    rulesets = rulesets or CANDIDATE_RULESETS
+    results: dict[str, dict] = {}
+
+    def profiling(name: str) -> float:
+        try:
+            rec = score(arch, shape, mesh_name, rulesets[name])
+        except Exception as e:  # noqa: BLE001 - invalid scheme = +inf
+            rec = {"error": f"{type(e).__name__}: {e}", objective: float("inf"),
+                   "bound_s": float("inf")}
+        results[name] = rec
+        val = rec.get(objective, float("inf"))
+        print(f"  {name:18s} -> {objective}={val:.6f}"
+              + (f" dominant={rec.get('dominant')}" if "dominant" in rec else ""))
+        return val
+
+    best, best_t = algorithm1(list(rulesets), profiling)
+    print(f"best scheme: {best} ({objective}={best_t:.6f})")
+    return best, results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--objective", default="bound_s")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    best, results = tune(args.arch, args.shape, args.mesh,
+                         objective=args.objective)
+    if args.out:
+        with open(args.out, "a") as f:
+            f.write(json.dumps({"arch": args.arch, "shape": args.shape,
+                                "mesh": args.mesh, "best": best,
+                                "results": results}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

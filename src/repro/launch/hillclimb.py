@@ -1,0 +1,268 @@
+"""§Perf hillclimbing driver: hypothesis -> change -> re-lower -> validate.
+
+Each experiment names a (arch, shape) pair, a variant (config transform +
+rule overrides + cache-sharding choice) and a written hypothesis.  The
+driver compiles the variant, derives the depth-calibrated roofline, and
+appends a JSONL record — EXPERIMENTS.md §Perf is written from these.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --pair arctic_train \
+        --out perf_experiments.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+from repro.configs.base import get_config
+from repro.core import costmodel as cm
+from repro.launch import dryrun
+
+
+def _variant(name: str, hypothesis: str, *, cfg_fn=None, rules=None,
+             seq_shard=None):
+    return {"name": name, "hypothesis": hypothesis, "cfg_fn": cfg_fn,
+            "rules": rules, "seq_shard": seq_shard}
+
+
+#: the three hillclimbed pairs (chosen from the baseline roofline table:
+#: most collective-bound / worst useful-flops fraction / most representative
+#: of the paper's technique on the serving side) + their hypothesis ladders.
+EXPERIMENTS: dict[str, dict] = {
+    # -- most collective-bound: ZeRO expert gather dominates ----------------
+    "arctic_train": {
+        "arch": "arctic-480b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            _variant("baseline", "paper-faithful DOS rules; microbatch=16; "
+                     "expert ff ZeRO-sharded over data -> per-microbatch "
+                     "all-gather dominates the collective term"),
+            _variant(
+                "mb8",
+                "halving microbatch count halves expert re-gathers "
+                "(collective ~/2) at the cost of 2x activation residuals; "
+                "napkin: coll 16->8 gathers/layer, act 0.5->1.0 GiB/dev-layer",
+                cfg_fn=lambda c: dataclasses.replace(c, microbatch=32)),
+            _variant(
+                "mb4",
+                "quarter the gathers; activations 4x baseline — expect "
+                "collective /4 but memory fit at risk",
+                cfg_fn=lambda c: dataclasses.replace(c, microbatch=64)),
+            _variant(
+                "experts_modelonly",
+                "drop ZeRO (expert_mlp replicated over data): no per-use "
+                "gather at all, but expert weights 16x per-chip memory — "
+                "expect collective floor but fits=NO (negative result "
+                "documenting why ZeRO is structurally required at 480B)",
+                cfg_fn=lambda c: dataclasses.replace(
+                    c, sharding_overrides=())),
+        ],
+    },
+    # -- worst useful-flops / memory fraction: SSD intra-chunk temporaries --
+    "hymba_train": {
+        "arch": "hymba-1.5b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            _variant("baseline", "paper-faithful rules; ssm_chunk=128; "
+                     "memory term dominated by the (b,c,h,l,l) intra-chunk "
+                     "decay matrices"),
+            _variant(
+                "chunk64",
+                "L-matrix bytes scale with chunk length l (b*s*h*l total): "
+                "halving l halves the SSD quadratic temporaries and flops; "
+                "inter-chunk scan doubles in length (cheap)",
+                cfg_fn=lambda c: dataclasses.replace(c, ssm_chunk=64)),
+            _variant(
+                "chunk32",
+                "same lever again; check for diminishing returns once the "
+                "attention branch dominates",
+                cfg_fn=lambda c: dataclasses.replace(c, ssm_chunk=32)),
+            _variant(
+                "chunk64_mb8",
+                "combine chunk64 with 8-way gradient accumulation: "
+                "residual activations /8 -> peak fits 16G",
+                cfg_fn=lambda c: dataclasses.replace(c, ssm_chunk=64,
+                                                     microbatch=32)),
+        ],
+    },
+    # -- iteration 2 (post-measurement code changes; run with --pair iter2) --
+    "iter2": {
+        "arch": "hymba-1.5b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            _variant(
+                "banded_swa",
+                "REFUTED chunk64 showed SSD temporaries are not the "
+                "dominant HBM term; the chunked-attention score blocks are "
+                "(all T/kvc kv blocks computed then masked).  Banded "
+                "iteration visits only ceil((qc+window)/kvc)+1 blocks: "
+                "napkin for window=1024, qc=512, kvc=1024, S=4096: "
+                "2-3 of 4 blocks -> ~35% attention flops/bytes cut; at "
+                "prefill_32k: 3 of 32 -> ~10x."),
+            _variant(
+                "banded_swa_mb8",
+                "banded + 8-way grad accumulation to bring residuals down "
+                "and fit 16G",
+                cfg_fn=lambda c: dataclasses.replace(c, microbatch=32)),
+        ],
+    },
+    "iter2_arctic": {
+        "arch": "arctic-480b", "shape": "train_4k", "mesh": "single",
+        "variants": [
+            _variant(
+                "int8_param_layout",
+                "baseline peak (3.6 TiB/dev) was NOT activations: SPMD "
+                "warned 'involuntary full rematerialization' converting "
+                "flat-block int8 moments to param sharding — the optimizer "
+                "materialized multi-TiB replicated fp32 moments.  "
+                "Re-laying quantization blockwise along each param's last "
+                "dim makes moment sharding == param sharding; predicted "
+                "peak -> O(20 GiB), memory term -> O(compute)."),
+            _variant(
+                "int8_layout_mb4",
+                "combine the layout fix with 4 accumulation steps to "
+                "quarter the ZeRO gather traffic",
+                cfg_fn=lambda c: dataclasses.replace(c, microbatch=64)),
+        ],
+    },
+    # -- most paper-representative serving pair: KV-cache DOS on decode -----
+    "chameleon_decode": {
+        "arch": "chameleon-34b", "shape": "decode_32k", "mesh": "single",
+        "variants": [
+            _variant("baseline", "8 kv heads < 16-way model axis: the DOS "
+                     "ladder displaces 'model' onto head_dim (contraction) — "
+                     "every attention layer pays an all-reduce"),
+            _variant(
+                "kv_replicated",
+                "replicate the kv projections/cache over model instead of "
+                "sharding head_dim: kills the attention all-reduce, costs "
+                "16x cache memory per chip — expect collective down, fits NO",
+                rules={"kv_heads": None}),
+            _variant(
+                "cache_seq_shard",
+                "context parallelism: shard the 32k cache SEQUENCE over "
+                "data (batch replicated): decode attention reduces over "
+                "seq shards (one psum of (B,H,D)) instead of head_dim "
+                "all-reduces; napkin: coll ~B*H*D*4 per layer vs B*W*K*D/16",
+                seq_shard=True),
+        ],
+    },
+}
+
+
+def _param_bytes_per_device(model) -> float:
+    """Forward-pass parameter bytes per device (sharded)."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    import jax
+    total = 0.0
+    bpe = 2 if model.cfg.param_dtype == "bfloat16" else 4
+    specs = jax.tree.leaves(model.partition_specs(),
+                            is_leaf=lambda x: isinstance(x, P))
+    leaves = jax.tree.leaves(model.abstract())
+    sizes = dict(zip(model.mesh.axis_names, model.mesh.devices.shape))
+    for spec, leaf in zip(specs, leaves):
+        n = int(np.prod(leaf.shape))
+        shard = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for nm in (entry if isinstance(entry, tuple) else (entry,)):
+                shard *= sizes[nm]
+        total += n * bpe / shard
+    return total
+
+
+def _zero3_gather_bytes(model) -> float:
+    """Per-device all-gather traffic to materialize data-sharded expert
+    weights once (forward; remat roughly doubles it — reported separately)."""
+    cfg = model.cfg
+    rules = dict(getattr(cfg, "sharding_overrides", ()) or ())
+    if rules.get("expert_mlp") != "data" or not cfg.n_experts:
+        return 0.0
+    sizes = dict(zip(model.mesh.axis_names, model.mesh.devices.shape))
+    model_ways = sizes.get("model", 1)
+    data_ways = sizes.get("data", 1)
+    bpe = 2 if cfg.param_dtype == "bfloat16" else 4
+    expert_bytes_per_shard = (cfg.n_layers * cfg.n_experts * 3 * cfg.d_model
+                              * cfg.d_ff * bpe / model_ways)
+    return expert_bytes_per_shard * (data_ways - 1) / data_ways
+
+
+def score(arch, shape, mesh_name, variant) -> dict:
+    mesh = dryrun.build_mesh(multi_pod=(mesh_name == "multi"))
+    base_cfg = dryrun.config_for(arch, shape)
+    cfg = variant["cfg_fn"](base_cfg) if variant["cfg_fn"] else base_cfg
+    lowered, compiled, model, _ = dryrun.lower_one(
+        arch, shape, mesh, rules=variant["rules"], cfg=cfg,
+        seq_shard=variant["seq_shard"])
+    rec = dryrun.analyze(arch, shape, mesh_name, lowered, compiled, model)
+    # depth calibration with the same variant transforms
+    cal = dryrun.calibrate_depth(arch, shape, mesh, rules=variant["rules"],
+                                 cfg=cfg, seq_shard=variant["seq_shard"])
+    # microbatch correction: calibration runs microbatch-free; parameter
+    # re-reads and ZeRO expert re-gathers repeat per accumulation step
+    if cfg.microbatch:
+        n_mb = max(dryrun.INPUT_SHAPES[shape].global_batch // cfg.microbatch, 1)
+        if n_mb > 1:
+            cal = dict(cal)
+            cal["bytes"] += _param_bytes_per_device(model) * (n_mb - 1)
+            cal["collective_bytes"] += _zero3_gather_bytes(model) * (n_mb - 1)
+            cal["microbatch_corrected"] = n_mb
+    terms = cm.roofline(cal["flops"], cal["bytes"], cal["collective_bytes"], 1)
+    rec["calibrated"] = {**cal, "compute_s": terms.compute_s,
+                         "memory_s": terms.memory_s,
+                         "collective_s": terms.collective_s,
+                         "dominant": terms.dominant, "bound_s": terms.bound_s}
+    return rec
+
+
+def run_pair(pair: str, out_path: str | None) -> list[dict]:
+    exp = EXPERIMENTS[pair]
+    results = []
+    out_f = open(out_path, "a") if out_path else None
+    for variant in exp["variants"]:
+        t0 = time.time()
+        rec = {"pair": pair, "variant": variant["name"],
+               "hypothesis": variant["hypothesis"],
+               "arch": exp["arch"], "shape": exp["shape"],
+               "mesh": exp["mesh"]}
+        try:
+            rec.update(score(exp["arch"], exp["shape"], exp["mesh"], variant))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rec["error"] = f"{type(e).__name__}: {e}"
+        rec["compile_s"] = round(time.time() - t0, 1)
+        results.append(rec)
+        if "error" not in rec:
+            c = rec["calibrated"]
+            print(f"{pair}.{variant['name']:20s} dominant={c['dominant']:10s} "
+                  f"compute={c['compute_s']*1e3:9.2f}ms "
+                  f"memory={c['memory_s']*1e3:9.2f}ms "
+                  f"coll={c['collective_s']*1e3:9.2f}ms "
+                  f"bound={c['bound_s']*1e3:9.2f}ms "
+                  f"peak={rec['memory']['peak_estimate']/2**30:7.2f}GiB "
+                  f"fits={rec['fits_hbm']}")
+        else:
+            print(f"{pair}.{variant['name']:20s} ERROR {rec['error'][:100]}")
+        if out_f:
+            slim = {k: v for k, v in rec.items() if k != "collectives"}
+            out_f.write(json.dumps(slim) + "\n")
+            out_f.flush()
+    if out_f:
+        out_f.close()
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all",
+                    choices=[*EXPERIMENTS, "all"])
+    ap.add_argument("--out", default="perf_experiments.jsonl")
+    args = ap.parse_args(argv)
+    pairs = list(EXPERIMENTS) if args.pair == "all" else [args.pair]
+    for p in pairs:
+        run_pair(p, args.out)
+
+
+if __name__ == "__main__":
+    main()

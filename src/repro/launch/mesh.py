@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (jax locks the device count on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(n_devices: int, *, multi_pod: bool = False):
+    """Small-device-count analogue for CI/tests (same axis names)."""
+    if multi_pod:
+        assert n_devices % 2 == 0
+        per_pod = n_devices // 2
+        d = _split(per_pod)
+        return make_mesh((2,) + d, ("pod", "data", "model"))
+    return make_mesh(_split(n_devices), ("data", "model"))
+
+
+def _split(n: int) -> tuple[int, int]:
+    a = 1
+    for c in range(int(n ** 0.5), 0, -1):
+        if n % c == 0:
+            a = c
+            break
+    return (n // a, a)

@@ -1,0 +1,87 @@
+"""End-to-end training driver.
+
+On real hardware this runs the full config on the production mesh; in this
+CPU container use ``--reduced`` (smoke config) — examples/train_lm.py drives
+a ~100M-parameter run for a few hundred steps.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+        --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import get_config
+from repro.data import SyntheticLM, make_train_iterator
+from repro.distributed import sharding as SH
+from repro.launch import mesh as mesh_lib
+from repro.models.model import Model
+from repro.optim import cosine_schedule
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="none", choices=["none", "single", "multi", "auto"])
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = None
+    if args.mesh != "none":
+        n = jax.device_count()
+        mesh = (mesh_lib.make_production_mesh(multi_pod=args.mesh == "multi")
+                if n >= 256 else mesh_lib.make_debug_mesh(n))
+    model = Model(cfg, mesh=mesh)
+    print(f"arch={cfg.name} params={model.param_count():,} "
+          f"devices={jax.device_count()}")
+
+    state = model.init_train_state(jax.random.key(args.seed))
+    baxes = SH.batch_axes_for(mesh, args.batch) if mesh else ()
+    sched = partial(cosine_schedule, peak_lr=args.lr,
+                    warmup_steps=args.warmup, total_steps=args.steps)
+    step_fn = jax.jit(lambda s, b: model.train_step(
+        s, b, batch_axes=baxes, lr_schedule=sched), donate_argnums=(0,))
+
+    data = make_train_iterator(
+        SyntheticLM(cfg.vocab, args.seq, seed=args.seed), args.batch)
+    t0 = time.time()
+    losses = []
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({dt / (step + 1):.2f} s/step)")
+        if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1, state.params)
+            print(f"  checkpoint @ {step + 1}")
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,351 @@
+"""Attention: GQA + RoPE (full/partial) + qk-norm + sliding window + caches.
+
+Three execution paths:
+  * ``full_attention`` — materialized scores, used for short sequences and as
+    the oracle in tests;
+  * ``chunked_attention`` — flash-style double-scan (online softmax) in pure
+    JAX; the train/prefill path for long sequences.  This is operator linking
+    applied to attention: QK^T -> softmax -> PV execute per-block with the
+    block intermediate held in VMEM, never materializing (S, S);
+  * ``decode_attention`` — one query position against a (ring-buffer) cache;
+    the serve_step hot loop (Pallas version in repro.kernels.decode_attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+from jax import lax
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import ParamSpec, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float) -> jax.Array:
+    """Inverse frequencies for the rotary dims (fraction<1 => partial RoPE,
+    the chatglm 2d convention: only the first fraction*head_dim dims rotate)."""
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    rot = inv_freq.shape[0] * 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (..., S, rot/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    r1 = (x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin).astype(x.dtype)
+    r2 = (x1.astype(jnp.float32) * sin + x2.astype(jnp.float32) * cos).astype(x.dtype)
+    out = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([out, x_pass], axis=-1) if x_pass.shape[-1] else out
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def attention_specs(d: int, n_heads: int, n_kv: int, head_dim: int,
+                    qk_norm: bool, cross: bool = False) -> dict[str, ParamSpec]:
+    specs = {
+        "wq": ParamSpec((d, n_heads, head_dim), ("embed", "heads", None)),
+        "wk": ParamSpec((d, n_kv, head_dim), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d, n_kv, head_dim), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((n_heads, head_dim, d), ("heads", None, "embed")),
+    }
+    if qk_norm:
+        specs["q_norm"] = ParamSpec((head_dim,), (None,), init="ones")
+        specs["k_norm"] = ParamSpec((head_dim,), (None,), init="ones")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,S,K,G,D) k: (B,T,K,D) -> scores (B,K,G,S,T)."""
+    return jnp.einsum("bskgd,btkd->bkgst", q, k)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: int = 0,
+                   q_offset: int = 0) -> jax.Array:
+    """q: (B,S,H,D), k/v: (B,T,K,D).  Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    scores = _gqa_scores(qg, k).astype(jnp.float32) / np.sqrt(D)
+    q_pos = jnp.arange(S) + q_offset
+    k_pos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, D)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      q_chunk: int = 512, kv_chunk: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention; never materializes (S, T).
+
+    Pure-JAX double scan: the (q_chunk, kv_chunk) score block is the only
+    quadratic intermediate.  Matches full_attention to float tolerance
+    (property-tested).
+    """
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if S % q_chunk or T % kv_chunk:
+        return full_attention(q, k, v, causal=causal, window=window)
+    nq, nk = S // q_chunk, T // kv_chunk
+    qg = q.reshape(B, nq, q_chunk, K, G, D)
+    kc = k.reshape(B, nk, kv_chunk, K, D)
+    vc = v.reshape(B, nk, kv_chunk, K, D)
+    scale = 1.0 / np.sqrt(D)
+
+    # banded iteration for sliding windows (beyond-paper, EXPERIMENTS §Perf):
+    # a q block only overlaps ceil((qc+window)/kvc)+1 kv blocks, so SWA
+    # archs skip the fully-masked tail instead of computing and masking it
+    # (flops AND score-block HBM traffic drop by ~T/(window+qc)).
+    banded = bool(window) and causal
+    nk_needed = min(nk, -(-(q_chunk + window) // kv_chunk) + 1) if banded else nk
+
+    def q_block(_, qi):
+        qb, qidx = qi  # (B, qc, K, G, D), scalar
+        q_pos = qidx * q_chunk + jnp.arange(q_chunk)
+        hi_block = (qidx * q_chunk + q_chunk - 1) // kv_chunk
+
+        def kv_block(carry, rel):
+            m, l, acc = carry
+            if banded:
+                kidx = hi_block - rel
+                block_ok = kidx >= 0
+                kb = lax.dynamic_index_in_dim(
+                    kc, jnp.maximum(kidx, 0), axis=1, keepdims=False)
+                vb = lax.dynamic_index_in_dim(
+                    vc, jnp.maximum(kidx, 0), axis=1, keepdims=False)
+            else:
+                kidx = rel
+                block_ok = jnp.bool_(True)
+                kb = lax.dynamic_index_in_dim(kc, kidx, axis=1, keepdims=False)
+                vb = lax.dynamic_index_in_dim(vc, kidx, axis=1, keepdims=False)
+            k_pos = kidx * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qb, kb).astype(jnp.float32) * scale
+            mask = jnp.full((q_chunk, kv_chunk), block_ok)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), jnp.arange(nk_needed))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,K,G,qc,D)
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_block, None,
+                             (qg.swapaxes(0, 1), jnp.arange(nq)))
+    # blocks: (nq, B, K, G, qc, D) -> (B, S, H, D)
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, D)
+    return out
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid: jax.Array, use_pallas: bool = False) -> jax.Array:
+    """One-token attention over a cache.
+
+    q: (B,H,D); caches: (B,W,K,D); valid: (B,W) bool mask of live slots.
+    """
+    if use_pallas:
+        from repro.kernels.decode_attention import ops as dec_ops
+        return dec_ops.gqa_decode(q, k_cache, v_cache, valid)
+    B, H, D = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg, k_cache).astype(jnp.float32) / np.sqrt(D)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgw,bwkd->bkgd", w, v_cache)
+    return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# The attention block (projections + rope + cache handling)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache.  ``window == cache width`` (full seq_len for
+    full attention, sliding window for SWA archs)."""
+    k: jax.Array          # (B, W, K, D)
+    v: jax.Array          # (B, W, K, D)
+    positions: jax.Array  # (B, W) int32, absolute position per slot, -1 = empty
+    length: jax.Array     # (B,) int32 tokens seen so far
+
+
+def init_kv_cache(batch: int, width: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, width, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, width, n_kv, head_dim), dtype),
+        positions=jnp.full((batch, width), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _project(p, x, name):
+    w = p[name].astype(x.dtype)
+    return jnp.einsum("bsd,dhk->bshk", x, w)
+
+
+def attention_block(p: dict[str, jax.Array], x: jax.Array, *,
+                    cfg, causal: bool = True, positions: jax.Array | None = None,
+                    kv: tuple[jax.Array, jax.Array] | None = None,
+                    use_chunked: bool | None = None) -> jax.Array:
+    """Training/prefill attention over a whole sequence.
+
+    x: (B,S,d).  ``kv`` overrides K/V inputs (cross-attention).
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = _project(p, x, "wq")
+    if kv is None:
+        k = _project(p, x, "wk")
+        v = _project(p, x, "wv")
+    else:
+        k, v = kv
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"]) if kv is None else k
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if kv is None and cfg.rope_fraction > 0:
+        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        q = apply_rope(q, positions, inv)
+        k = apply_rope(k, positions, inv)
+    if use_chunked is None:
+        use_chunked = S > 2048
+    if use_chunked and kv is None:
+        out = chunked_attention(q, k, v, causal=causal,
+                                window=cfg.sliding_window)
+    else:
+        out = full_attention(q, k, v, causal=causal and kv is None,
+                             window=cfg.sliding_window if kv is None else 0)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
+                           cache: KVCache, *, cfg,
+                           cross_kv: tuple[jax.Array, jax.Array] | None = None,
+                           use_pallas: bool = False) -> tuple[jax.Array, KVCache]:
+    """One decode step.  x: (B, 1, d).  Updates the ring-buffer cache.
+
+    RoPE is applied at *write* time (k cached post-rotation, standard decode
+    practice): absolute-position rotation of both q and k preserves the
+    relative property, so the ring buffer never needs re-rotation.
+    """
+    B, _, _ = x.shape
+    hd = cfg.resolved_head_dim
+    W = cache.k.shape[1]
+    pos = cache.length  # (B,) position of the new token
+
+    q = _project(p, x, "wq")[:, 0]            # (B, H, D)
+    if cross_kv is not None:
+        # cross-attention: cache holds the (static) encoder K/V — no update
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"])
+        k_c, v_c = cross_kv
+        valid = jnp.ones(k_c.shape[:2], bool)
+        out = decode_attention(q, k_c, v_c, valid, use_pallas)
+        return jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))[:, None], cache
+
+    k_new = _project(p, x, "wk")[:, 0]         # (B, K, D)
+    v_new = _project(p, x, "wv")[:, 0]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k_new = rms_norm(k_new, p["k_norm"])
+    if cfg.rope_fraction > 0:
+        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        q = apply_rope(q[:, None], pos[:, None], inv)[:, 0]
+        k_new = apply_rope(k_new[:, None], pos[:, None], inv)[:, 0]
+
+    slot = (pos % W).astype(jnp.int32)         # ring-buffer write index
+    bidx = jnp.arange(B)
+    k_cache = cache.k.at[bidx, slot].set(k_new.astype(cache.k.dtype))
+    v_cache = cache.v.at[bidx, slot].set(v_new.astype(cache.v.dtype))
+    positions = cache.positions.at[bidx, slot].set(pos)
+    # valid slots: written, and within the sliding window if one is set
+    valid = positions >= 0
+    if cfg.sliding_window:
+        valid &= positions > (pos[:, None] - cfg.sliding_window)
+    out = decode_attention(q, k_cache, v_cache, valid, use_pallas)
+    new_cache = KVCache(k=k_cache, v=v_cache, positions=positions,
+                        length=cache.length + 1)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
+    return y[:, None], new_cache
+
+
+def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
+                       *, cfg) -> tuple[jax.Array, KVCache]:
+    """Prefill: run full-sequence attention AND populate the cache.
+
+    Used by prefill_32k.  For a sliding-window cache (W < S) only the last W
+    positions land in the ring buffer.
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    W = cache.k.shape[1]
+    q = _project(p, x, "wq")
+    k = _project(p, x, "wk")
+    v = _project(p, x, "wv")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    positions = jnp.arange(S)[None, :]
+    if cfg.rope_fraction > 0:
+        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        q = apply_rope(q, positions, inv)
+        k = apply_rope(k, positions, inv)
+    out = (chunked_attention if S > 2048 else full_attention)(
+        q, k, v, causal=True, window=cfg.sliding_window)
+    # write the last min(W, S) positions into the ring buffer at their slots
+    take = min(W, S)
+    tail_pos = jnp.arange(S - take, S)
+    slots = tail_pos % W
+    k_cache = cache.k.at[:, slots].set(k[:, S - take:].astype(cache.k.dtype))
+    v_cache = cache.v.at[:, slots].set(v[:, S - take:].astype(cache.v.dtype))
+    positions_c = cache.positions.at[:, slots].set(
+        jnp.broadcast_to(tail_pos, (B, take)))
+    new_cache = KVCache(k=k_cache, v=v_cache, positions=positions_c,
+                        length=jnp.full((B,), S, jnp.int32))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache

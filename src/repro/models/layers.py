@@ -1,0 +1,163 @@
+"""Parameter-spec system + basic layers (pure JAX, no flax in this env).
+
+Every parameter is declared once as a ``ParamSpec`` carrying its shape AND
+its *logical axes* — the Xenos DOS planner (repro.distributed.sharding) maps
+logical axes to mesh axes, which is exactly the paper's "outC-first"
+feature-map/parameter partitioning expressed for transformers.
+
+From one spec tree we derive: concrete initialized params, abstract
+ShapeDtypeStructs (dry-run), and PartitionSpec trees (sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# logical axis vocabulary (DESIGN.md §2: outC ≙ heads/mlp/experts/vocab,
+# inH/inW ≙ batch/sequence)
+LOGICAL_AXES = (
+    "vocab", "embed", "heads", "kv_heads", "head_dim", "qkv", "mlp",
+    "experts", "expert_mlp", "ssm_inner", "ssm_state", "ssm_heads", "conv",
+    "layers", None,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]            # logical axis name per dim (None = replicated)
+    init: str = "normal"             # normal | zeros | ones | embed
+    scale: float = 0.0               # 0 => fan-in default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+        for a in self.axes:
+            assert a in LOGICAL_AXES, a
+
+
+ParamTree = Any  # nested dict[str, ...] of ParamSpec / jax.Array
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * 0.02).astype(dtype)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else spec.shape[-1]
+    if len(spec.shape) == 3:  # stacked experts / layers: fan-in is dim 1
+        fan_in = spec.shape[1]
+    scale = spec.scale or (1.0 / np.sqrt(max(fan_in, 1)))
+    return (jax.random.normal(key, spec.shape) * scale).astype(dtype)
+
+
+def init_params(specs: ParamTree, key: jax.Array, dtype=jnp.float32) -> ParamTree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs: ParamTree, dtype=jnp.float32) -> ParamTree:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def logical_axes(specs: ParamTree) -> ParamTree:
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_layer_specs(specs: ParamTree, n_layers: int) -> ParamTree:
+    """Add a leading scan ('layers') axis to every leaf spec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n_layers,) + s.shape, ("layers",) + s.axes,
+                            s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(specs: ParamTree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Layers (functional)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def rms_norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), init="ones")
+
+
+def swiglu_specs(d: int, ff: int) -> dict[str, ParamSpec]:
+    return {
+        "gate": ParamSpec((d, ff), ("embed", "mlp")),
+        "up": ParamSpec((d, ff), ("embed", "mlp")),
+        "down": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def swiglu(p: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """SwiGLU MLP.  The gate@x and up@x matmuls feed the down matmul without
+    the hidden activation leaving the fused region — this is the transformer
+    instance of the paper's Matmul->Matmul operator linking (Table 1), and
+    where ``repro.kernels.linked_matmul`` plugs in on TPU."""
+    h = jax.nn.silu(x @ p["gate"].astype(x.dtype)) * (x @ p["up"].astype(x.dtype))
+    return h @ p["down"].astype(x.dtype)
+
+
+def gelu_mlp_specs(d: int, ff: int) -> dict[str, ParamSpec]:
+    return {
+        "up": ParamSpec((d, ff), ("embed", "mlp")),
+        "up_b": ParamSpec((ff,), ("mlp",), init="zeros"),
+        "down": ParamSpec((ff, d), ("mlp", "embed")),
+        "down_b": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def gelu_mlp(p: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["up"].astype(x.dtype) + p["up_b"].astype(x.dtype))
+    return h @ p["down"].astype(x.dtype) + p["down_b"].astype(x.dtype)
+
+
+def embed_specs(vocab: int, d: int) -> dict[str, ParamSpec]:
+    return {"tokens": ParamSpec((vocab, d), ("vocab", "embed"), init="embed")}
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, dtype) -> jax.Array:
+    # one_hot matmul would all-gather the sharded table; take() keeps the
+    # gather local to the vocab shard under GSPMD.
+    return jnp.take(table, ids, axis=0).astype(dtype)
+
+
+def unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits over the (padded, vocab-sharded) vocabulary."""
+    return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean next-token CE; positions with label < 0 are masked; logits are
+    over a padded vocab — padded entries are masked to -inf."""
+    logits = logits.astype(jnp.float32)
+    padded = logits.shape[-1]
+    if padded > vocab:
+        pad_mask = jnp.arange(padded) >= vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

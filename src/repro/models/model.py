@@ -1,0 +1,296 @@
+"""Top-level model: parameters, steps (train / prefill / serve), input specs.
+
+``Model`` is pure-functional glue: it owns no arrays, only the spec trees
+and the step functions.  All three steps are jit-able and lower with
+ShapeDtypeStruct inputs — launch/dryrun.py drives exactly these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding as SH
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+
+from . import attention as A
+from . import transformer as T
+from .layers import (abstract_params, cross_entropy, embed_lookup,
+                     embed_specs, init_params, logical_axes, param_count,
+                     rms_norm, rms_norm_spec, stack_layer_specs, unembed)
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "float16": jnp.float16}
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, mesh=None,
+                 rules: dict | None = None, use_pallas: bool = False,
+                 opt_cfg: AdamWConfig | None = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = SH.rules_for(cfg, mesh, rules) if mesh is not None else {}
+        self.use_pallas = use_pallas
+        self.dtype = _DTYPES[cfg.dtype]
+        self.param_dtype = _DTYPES[cfg.param_dtype]
+        self.opt_cfg = opt_cfg or AdamWConfig(moment_dtype=cfg.opt_dtype)
+
+    # ------------------------------------------------------------------ specs
+    def param_specs(self):
+        cfg = self.cfg
+        specs: dict[str, Any] = {
+            "embed": embed_specs(cfg.padded_vocab(), cfg.d_model),
+            "layers": stack_layer_specs(
+                T.decoder_layer_specs(cfg, cross=cfg.is_encoder_decoder),
+                cfg.n_layers),
+            "final_norm": rms_norm_spec(cfg.d_model),
+        }
+        if cfg.is_encoder_decoder:
+            specs["encoder"] = stack_layer_specs(
+                T.encoder_layer_specs(cfg), cfg.encoder_layers)
+            specs["enc_norm"] = rms_norm_spec(cfg.d_model)
+        return specs
+
+    def init(self, key: jax.Array):
+        return init_params(self.param_specs(), key, self.param_dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_specs(), self.param_dtype)
+
+    def partition_specs(self):
+        return SH.param_partition_specs(self.param_specs(), self.rules,
+                                        self.mesh)
+
+    def shardings(self):
+        assert self.mesh is not None
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.partition_specs(),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def param_count(self) -> int:
+        return param_count(self.param_specs())
+
+    # ---------------------------------------------------------------- forward
+    def _encode(self, params, src):
+        cfg = self.cfg
+        x = src.astype(self.dtype)
+        x = T.encoder_stack(params["encoder"], x, cfg=cfg)
+        return rms_norm(x, params["enc_norm"])
+
+    def forward(self, params, batch, batch_axes=()):
+        """Full-sequence forward -> (logits, aux_loss)."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = self._encode(params, batch["src"])
+        x = embed_lookup(params["embed"]["tokens"], batch["tokens"], self.dtype)
+        if self.mesh is not None and batch_axes:
+            x = jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, SH.activation_spec(batch_axes, 3)))
+        x, aux = T.decoder_stack(params["layers"], x, cfg=cfg, mesh=self.mesh,
+                                 batch_axes=batch_axes, enc_out=enc_out)
+        x = rms_norm(x, params["final_norm"])
+        logits = unembed(params["embed"]["tokens"], x)
+        return logits, aux
+
+    def loss_fn(self, params, batch, batch_axes=()):
+        logits, aux = self.forward(params, batch, batch_axes)
+        ce = cross_entropy(logits, batch["labels"], self.cfg.vocab)
+        return ce + self.cfg.router_aux_coef * aux, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------ train
+    def init_train_state(self, key: jax.Array) -> TrainState:
+        params = self.init(key)
+        return TrainState(params=params, opt=adamw_init(params, self.opt_cfg),
+                          step=jnp.zeros((), jnp.int32))
+
+    def train_step(self, state: TrainState, batch, batch_axes=(),
+                   lr_schedule=None):
+        cfg = self.cfg
+        mb = cfg.microbatch
+
+        def grads_of(params, b):
+            (l, m), g = jax.value_and_grad(
+                lambda p: self.loss_fn(p, b, batch_axes), has_aux=True)(params)
+            return l, m, g
+
+        if mb and batch["tokens"].shape[0] > mb:
+            n_mb = batch["tokens"].shape[0] // mb
+            sliced = jax.tree.map(
+                lambda x: x.reshape((n_mb, mb) + x.shape[1:]), batch)
+
+            def mb_step(carry, b):
+                loss_acc, g_acc = carry
+                l, m, g = grads_of(state.params, b)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(jnp.zeros_like, state.params)
+            if cfg.unroll_microbatch:
+                # calibration mode: scan trip counts are invisible to XLA
+                # cost analysis, so the dry-run unrolls the accumulation
+                carry = (jnp.zeros(()), g0)
+                for i in range(n_mb):
+                    carry, _ = mb_step(
+                        carry, jax.tree.map(lambda x: x[i], sliced))
+                loss, grads = carry
+            else:
+                (loss, grads), _ = lax.scan(mb_step, (jnp.zeros(()), g0),
+                                            sliced)
+            loss = loss / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(state.params, batch)
+
+        lr = lr_schedule(state.step) if lr_schedule else self.opt_cfg.lr
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, self.opt_cfg, lr)
+        metrics = {"loss": loss, **metrics, **opt_metrics}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    # ---------------------------------------------------------------- serving
+    def cache_width(self, seq_len: int) -> int:
+        w = self.cfg.sliding_window or seq_len
+        return min(w, seq_len)
+
+    def init_caches(self, batch: int, seq_len: int, src_len: int = 0):
+        """Stacked per-layer caches (leading layer axis on every leaf)."""
+        cfg = self.cfg
+        width = self.cache_width(seq_len)
+        one = T.init_layer_cache(cfg, batch, width, src_len, self.dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+
+    def prefill_step(self, params, batch, batch_axes=(), max_len: int = 0):
+        """Run the prompt, return (last-position logits, populated caches).
+
+        ``max_len`` sizes the KV cache for the decode horizon (defaults to
+        the prompt length — pass the serving budget for real use).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        enc_out = None
+        src_len = 0
+        if cfg.is_encoder_decoder:
+            enc_out = self._encode(params, batch["src"])
+            src_len = enc_out.shape[1]
+        x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
+        caches = self.init_caches(B, max(max_len, S), src_len)
+
+        def body(carry, inp):
+            h = carry
+            lp, cache = inp
+            fam = cfg.family
+            hn = rms_norm(h, lp["norm1"])
+            new_cache = cache
+            if fam == "ssm":
+                y, st = T.S.mamba2_block(lp["ssm"], hn, cfg=cfg,
+                                         return_state=True)
+                h = h + y
+                new_cache = new_cache._replace(
+                    ssm=T.S.SSMCache(state=st, conv=_conv_tail(hn, lp, cfg)))
+                return h, new_cache
+            if fam == "hybrid":
+                att, kv = A.prefill_into_cache(lp["attn"], hn, cache.kv, cfg=cfg)
+                y, st = T.S.mamba2_block(lp["ssm"], hn, cfg=cfg,
+                                         return_state=True)
+                h = h + 0.5 * (att * lp["attn_scale"].astype(h.dtype)
+                               + y * lp["ssm_scale"].astype(h.dtype))
+                new_cache = new_cache._replace(
+                    kv=kv, ssm=T.S.SSMCache(state=st,
+                                            conv=_conv_tail(hn, lp, cfg)))
+            else:
+                att, kv = A.prefill_into_cache(lp["attn"], hn, cache.kv, cfg=cfg)
+                h = h + att
+                new_cache = new_cache._replace(kv=kv)
+            if cfg.is_encoder_decoder:
+                ck, cv = T._cross_kv(lp["cross_attn"], enc_out)
+                hc = rms_norm(h, lp["norm_cross"])
+                h = h + A.attention_block(lp["cross_attn"], hc, cfg=cfg,
+                                          causal=False, kv=(ck, cv))
+                new_cache = new_cache._replace(
+                    cross_k=ck.astype(self.dtype), cross_v=cv.astype(self.dtype))
+            h2 = rms_norm(h, lp["norm2"])
+            if fam == "moe":
+                mo, _ = T.M.moe_block(lp["moe"], h2, cfg=cfg, mesh=self.mesh,
+                                      batch_axes=batch_axes)
+                if cfg.moe_dense_residual:
+                    mo = mo + T.swiglu(lp["dense_mlp"], h2)
+                h = h + mo
+            elif fam == "audio":
+                h = h + T.gelu_mlp(lp["mlp"], h2)
+            else:
+                h = h + T.swiglu(lp["mlp"], h2)
+            return h, new_cache
+
+        x, new_caches = T.scan_or_unroll(body, x, (params["layers"], caches),
+                                         cfg.scan_layers)
+        x = rms_norm(x[:, -1:], params["final_norm"])
+        logits = unembed(params["embed"]["tokens"], x)[:, 0]
+        return logits, new_caches
+
+    def serve_step(self, params, caches, tokens, batch_axes=()):
+        """One decode step.  tokens: (B, 1) -> (logits (B, V), new caches)."""
+        cfg = self.cfg
+        x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
+        x, new_caches = T.decoder_stack_decode(
+            params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
+            batch_axes=batch_axes, use_pallas=self.use_pallas)
+        x = rms_norm(x, params["final_norm"])
+        logits = unembed(params["embed"]["tokens"], x)[:, 0]
+        return logits, new_caches
+
+    # ------------------------------------------------------------ input specs
+    def input_specs(self, shape: InputShape) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (dry-run).
+
+        The modality frontend carve-out lives here: audio provides
+        precomputed frame embeddings, vlm provides VQ token ids.
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if shape.kind == "train":
+            if cfg.is_encoder_decoder:
+                half = S // 2
+                return {"src": jax.ShapeDtypeStruct((B, half, cfg.d_model),
+                                                    self.dtype),
+                        "tokens": tok(B, half), "labels": tok(B, half)}
+            return {"tokens": tok(B, S), "labels": tok(B, S)}
+        if shape.kind == "prefill":
+            if cfg.is_encoder_decoder:
+                half = S // 2
+                return {"src": jax.ShapeDtypeStruct((B, half, cfg.d_model),
+                                                    self.dtype),
+                        "tokens": tok(B, half)}
+            return {"tokens": tok(B, S)}
+        # decode: one new token + caches of width cache_width(S)
+        src_len = S // 2 if cfg.is_encoder_decoder else 0
+        caches = jax.eval_shape(
+            lambda: self.init_caches(B, S, src_len))
+        return {"tokens": tok(B, 1), "caches": caches}
+
+
+def _conv_tail(hn, lp, cfg):
+    """Conv shift-register contents after a prefill: last (K-1) conv inputs."""
+    p = lp["ssm"]
+    di = cfg.ssm_inner
+    zx = hn @ p["w_zx"].astype(hn.dtype)
+    xs = zx[..., di:]
+    bc = hn @ p["w_bc"].astype(hn.dtype)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    return conv_in[:, -(cfg.ssm_conv - 1):, :]

@@ -1,0 +1,209 @@
+"""Mamba2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm for train/prefill (intra-chunk dual "attention-like"
+quadratic form + inter-chunk linear state recurrence via lax.scan), O(1)
+recurrent state update for decode.
+
+DOS mapping (DESIGN.md §4): the SSM head/channel dim (``ssm_inner``) is the
+``outC`` analogue and shards over the model axis; the state recurrence runs
+along the (unsharded) sequence, so no collective is introduced inside a
+layer beyond the output projection's reduce.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import ParamSpec, rms_norm
+
+
+def mamba2_specs(cfg) -> dict[str, ParamSpec]:
+    d, di = cfg.d_model, cfg.ssm_inner
+    g, n, nh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    return {
+        "w_zx": ParamSpec((d, 2 * di), ("embed", "ssm_inner")),
+        "w_bc": ParamSpec((d, 2 * g * n), ("embed", None)),
+        "w_dt": ParamSpec((d, nh), ("embed", "ssm_heads")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), (None, "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "out": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, nh, P, N) recurrent state
+    conv: jax.Array        # (B, conv_w - 1, conv_dim) shift register
+
+
+def init_ssm_cache(batch: int, cfg, dtype=jnp.float32) -> SSMCache:
+    di = cfg.ssm_inner
+    conv_dim = di + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMCache(
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                        jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    )
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L) -> (..., L, L) with out[i, j] = sum_{j < t <= i} a[t],
+    -inf above the diagonal (the 1-semiseparable decay log-matrix)."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along sequence.  x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        pad, w[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                initial_state: jax.Array | None = None,
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) negative;
+    B, C: (b, s, g, n) with g dividing h.  Returns (y (b,s,h,p),
+    final_state (b,h,p,n)).
+    """
+    b, s, h, p_ = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    rep = h // g
+    x_ = x.reshape(b, c, chunk, h, p_).astype(jnp.float32)
+    dt_ = dt.reshape(b, c, chunk, h).astype(jnp.float32)
+    B_ = jnp.repeat(B.reshape(b, c, chunk, g, n), rep, axis=3).astype(jnp.float32)
+    C_ = jnp.repeat(C.reshape(b, c, chunk, g, n), rep, axis=3).astype(jnp.float32)
+
+    xdt = x_ * dt_[..., None]                          # dt folded into x
+    dA = dt_ * A.astype(jnp.float32)                   # (b,c,l,h) log-decays
+    dA_cum = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+
+    # 1. intra-chunk (diagonal blocks): dual quadratic form
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))     # (b,c,h,l,l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", C_, B_)  # (b,c,h,l,l)
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp", scores, L, xdt)
+
+    # 2. chunk-final states
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b,c,l,h)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", B_, decay_states, xdt)
+
+    # 3. inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])               # (b,c,h)
+
+    def step(h_prev, inp):
+        dec, st = inp                                         # (b,h), (b,h,p,n)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h0 = initial_state.astype(jnp.float32) if initial_state is not None \
+        else jnp.zeros((b, h, p_, n), jnp.float32)
+    final_state, h_prevs = lax.scan(
+        step, h0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                          # (b,c,h,p,n)
+
+    # 4. inter-chunk output: state seen by each position
+    state_decay = jnp.exp(dA_cum)                             # (b,c,l,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", C_, h_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p_)
+    return y.astype(x.dtype), final_state
+
+
+def mamba2_block(p: dict[str, jax.Array], x: jax.Array, *, cfg,
+                 initial_state: jax.Array | None = None,
+                 return_state: bool = False):
+    """Full Mamba2 mixer over a sequence.  x: (B, S, d)."""
+    Bsz, S, d = x.shape
+    di, g, n, nh = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    zx = x @ p["w_zx"].astype(x.dtype)
+    z, xs = zx[..., :di], zx[..., di:]
+    bc = x @ p["w_bc"].astype(x.dtype)
+    dt = x @ p["w_dt"].astype(x.dtype)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                    p["conv_b"].astype(x.dtype)))
+    xs, bc = conv[..., :di], conv[..., di:]
+    B_ = bc[..., :g * n].reshape(Bsz, S, g, n)
+    C_ = bc[..., g * n:].reshape(Bsz, S, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(Bsz, S, nh, hp)
+    # pad the sequence to a chunk multiple; padded steps get dt=0 so they are
+    # identity transitions (decay exp(0)=1, zero input) — state is unchanged.
+    pad = (-S) % cfg.ssm_chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, state = ssd_chunked(xh, dt, A, B_, C_, cfg.ssm_chunk, initial_state)
+    if pad:
+        y = y[:, :S]
+        xh = xh[:, :S]
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out"].astype(x.dtype)
+    if return_state:
+        return out, state
+    return out
+
+
+def mamba2_decode(p: dict[str, jax.Array], x: jax.Array, cache: SSMCache,
+                  *, cfg) -> tuple[jax.Array, SSMCache]:
+    """One-token recurrent step.  x: (B, 1, d)."""
+    Bsz = x.shape[0]
+    di, g, n, nh = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    xt = x[:, 0]
+    zx = xt @ p["w_zx"].astype(x.dtype)
+    z, xs = zx[..., :di], zx[..., di:]
+    bc = xt @ p["w_bc"].astype(x.dtype)
+    dt = xt @ p["w_dt"].astype(x.dtype)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)               # (B, conv_dim)
+    # shift-register causal conv
+    window = jnp.concatenate([cache.conv, conv_in[:, None, :]], axis=1)
+    w = p["conv_w"].astype(x.dtype)                            # (K, conv_dim)
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w)
+                       + p["conv_b"].astype(x.dtype))
+    new_conv = window[:, 1:]
+    xs, bc = conv[..., :di], conv[..., di:]
+    B_ = bc[..., :g * n].reshape(Bsz, g, n)
+    C_ = bc[..., g * n:].reshape(Bsz, g, n)
+    rep = nh // g
+    B_ = jnp.repeat(B_, rep, axis=1).astype(jnp.float32)        # (B, nh, n)
+    C_ = jnp.repeat(C_, rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                        # (B, nh)
+    xh = xs.reshape(Bsz, nh, hp).astype(jnp.float32)
+    # h <- h * dA + (dt * x) outer B
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, B_)
+    state = cache.state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, C_)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["out"].astype(x.dtype))[:, None]
+    return out, SSMCache(state=state, conv=new_conv)

@@ -1,0 +1,261 @@
+"""Transformer stacks for every assigned architecture family.
+
+One homogeneous layer per family, stacked with ``lax.scan`` over
+layer-stacked parameters (compile time stays flat in depth, which matters
+for 48-layer × 512-device dry-runs).  Families:
+
+  dense / vlm : pre-norm GQA attention + SwiGLU MLP
+  moe         : attention + expert-parallel MoE (+ optional dense residual)
+  ssm         : Mamba2 (SSD) mixer only
+  hybrid      : attention and Mamba2 heads in PARALLEL on the same normed
+                input, mean-fused (Hymba), + SwiGLU MLP
+  audio       : encoder (bidirectional attn + GELU MLP) and decoder
+                (causal self-attn + cross-attn + GELU MLP)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import attention as A
+from . import moe as M
+from . import ssm as S
+from .layers import (ParamSpec, gelu_mlp, gelu_mlp_specs, rms_norm,
+                     rms_norm_spec, stack_layer_specs, swiglu, swiglu_specs)
+
+
+# ---------------------------------------------------------------------------
+# Layer specs
+# ---------------------------------------------------------------------------
+
+def decoder_layer_specs(cfg, cross: bool = False) -> dict[str, Any]:
+    d = cfg.d_model
+    specs: dict[str, Any] = {"norm1": rms_norm_spec(d)}
+    fam = cfg.family
+    if not cfg.attn_free:
+        specs["attn"] = A.attention_specs(d, cfg.n_heads, cfg.n_kv_heads,
+                                          cfg.resolved_head_dim, cfg.qk_norm)
+    if fam in ("ssm", "hybrid"):
+        specs["ssm"] = S.mamba2_specs(cfg)
+    if fam == "hybrid":
+        # learned per-branch fusion scales (Hymba mean-fusion with norms)
+        specs["attn_scale"] = ParamSpec((d,), ("embed",), init="ones")
+        specs["ssm_scale"] = ParamSpec((d,), ("embed",), init="ones")
+    if cross:
+        specs["norm_cross"] = rms_norm_spec(d)
+        specs["cross_attn"] = A.attention_specs(d, cfg.n_heads, cfg.n_kv_heads,
+                                                cfg.resolved_head_dim, False)
+    if fam == "moe":
+        specs["norm2"] = rms_norm_spec(d)
+        specs["moe"] = M.moe_specs(d, cfg.d_ff, cfg.n_experts)
+        if cfg.moe_dense_residual:
+            specs["dense_mlp"] = swiglu_specs(d, cfg.d_ff)
+    elif fam == "audio":
+        specs["norm2"] = rms_norm_spec(d)
+        specs["mlp"] = gelu_mlp_specs(d, cfg.d_ff)
+    elif fam != "ssm":
+        specs["norm2"] = rms_norm_spec(d)
+        specs["mlp"] = swiglu_specs(d, cfg.d_ff)
+    return specs
+
+
+def encoder_layer_specs(cfg) -> dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "norm1": rms_norm_spec(d),
+        "attn": A.attention_specs(d, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.resolved_head_dim, False),
+        "norm2": rms_norm_spec(d),
+        "mlp": gelu_mlp_specs(d, cfg.d_ff),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence layer forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def decoder_layer(p, x, *, cfg, mesh=None, batch_axes=("data",),
+                  enc_out=None, causal: bool = True, use_pallas: bool = False):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"])
+    if fam == "hybrid":
+        att = A.attention_block(p["attn"], h, cfg=cfg, causal=causal)
+        ssm_o = S.mamba2_block(p["ssm"], h, cfg=cfg)
+        x = x + 0.5 * (att * p["attn_scale"].astype(x.dtype)
+                       + ssm_o * p["ssm_scale"].astype(x.dtype))
+    elif fam == "ssm":
+        x = x + S.mamba2_block(p["ssm"], h, cfg=cfg)
+        return x, aux
+    else:
+        x = x + A.attention_block(p["attn"], h, cfg=cfg, causal=causal)
+    if enc_out is not None:
+        hc = rms_norm(x, p["norm_cross"])
+        kv = _cross_kv(p["cross_attn"], enc_out)
+        x = x + A.attention_block(p["cross_attn"], hc, cfg=cfg, causal=False,
+                                  kv=kv)
+    h2 = rms_norm(x, p["norm2"])
+    if fam == "moe":
+        mo, aux = M.moe_block(p["moe"], h2, cfg=cfg, mesh=mesh,
+                              batch_axes=batch_axes)
+        if cfg.moe_dense_residual:
+            mo = mo + swiglu(p["dense_mlp"], h2)
+        x = x + mo
+    elif fam == "audio":
+        x = x + gelu_mlp(p["mlp"], h2)
+    else:
+        x = x + swiglu(p["mlp"], h2)
+    return x, aux
+
+
+def encoder_layer(p, x, *, cfg):
+    h = rms_norm(x, p["norm1"])
+    x = x + A.attention_block(p["attn"], h, cfg=cfg, causal=False)
+    x = x + gelu_mlp(p["mlp"], rms_norm(x, p["norm2"]))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Stacks (scan over stacked layer params; optionally unrolled — XLA's cost
+# analysis counts a while-loop body once, so the dry-run calibration compiles
+# unrolled variants to recover true per-layer costs)
+# ---------------------------------------------------------------------------
+
+def scan_or_unroll(body, carry, xs, use_scan: bool):
+    if use_scan:
+        return lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def decoder_stack(stacked, x, *, cfg, mesh=None, batch_axes=("data",),
+                  enc_out=None, remat: bool | None = None):
+    remat = cfg.remat if remat is None else remat
+
+    def body(carry, lp):
+        y, aux = decoder_layer(lp, carry, cfg=cfg, mesh=mesh,
+                               batch_axes=batch_axes, enc_out=enc_out)
+        return y, aux
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, auxs = scan_or_unroll(body, x, stacked, cfg.scan_layers)
+    return x, jnp.sum(auxs)
+
+
+def encoder_stack(stacked, x, *, cfg, remat: bool | None = None):
+    remat = cfg.remat if remat is None else remat
+
+    def body(carry, lp):
+        return encoder_layer(lp, carry, cfg=cfg), jnp.zeros(())
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = scan_or_unroll(body, x, stacked, cfg.scan_layers)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Decode-step layer + stack (serve path)
+# ---------------------------------------------------------------------------
+
+class LayerCache(NamedTuple):
+    """Per-layer decode cache; unused fields are () placeholders so the
+    pytree structure stays static across families."""
+    kv: Any = ()            # A.KVCache or ()
+    ssm: Any = ()           # S.SSMCache or ()
+    cross_k: Any = ()       # (B, Ssrc, K, D) or ()
+    cross_v: Any = ()
+
+
+def init_layer_cache(cfg, batch: int, width: int, src_len: int = 0,
+                     dtype=jnp.bfloat16) -> LayerCache:
+    kv: Any = ()
+    ssm: Any = ()
+    ck: Any = ()
+    cv: Any = ()
+    if not cfg.attn_free:
+        kv = A.init_kv_cache(batch, width, cfg.n_kv_heads,
+                             cfg.resolved_head_dim, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        ssm = S.init_ssm_cache(batch, cfg, dtype)
+    if cfg.is_encoder_decoder and src_len:
+        ck = jnp.zeros((batch, src_len, cfg.n_kv_heads, cfg.resolved_head_dim), dtype)
+        cv = jnp.zeros_like(ck)
+    return LayerCache(kv=kv, ssm=ssm, cross_k=ck, cross_v=cv)
+
+
+def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
+                         batch_axes=(), use_pallas: bool = False):
+    """One-token decode through one layer.  x: (B, 1, d)."""
+    fam = cfg.family
+    h = rms_norm(x, p["norm1"])
+    new = cache
+    if fam == "hybrid":
+        att, kv = A.attention_decode_block(p["attn"], h, cache.kv, cfg=cfg,
+                                           use_pallas=use_pallas)
+        ssm_o, sc = S.mamba2_decode(p["ssm"], h, cache.ssm, cfg=cfg)
+        x = x + 0.5 * (att * p["attn_scale"].astype(x.dtype)
+                       + ssm_o * p["ssm_scale"].astype(x.dtype))
+        new = new._replace(kv=kv, ssm=sc)
+    elif fam == "ssm":
+        y, sc = S.mamba2_decode(p["ssm"], h, cache.ssm, cfg=cfg)
+        return x + y, new._replace(ssm=sc)
+    else:
+        att, kv = A.attention_decode_block(p["attn"], h, cache.kv, cfg=cfg,
+                                           use_pallas=use_pallas)
+        x = x + att
+        new = new._replace(kv=kv)
+    if cfg.is_encoder_decoder and not isinstance(cache.cross_k, tuple):
+        hc = rms_norm(x, p["norm_cross"])
+        y, _ = A.attention_decode_block(p["cross_attn"], hc, cache.kv, cfg=cfg,
+                                        cross_kv=(cache.cross_k, cache.cross_v),
+                                        use_pallas=use_pallas)
+        x = x + y
+    h2 = rms_norm(x, p["norm2"]) if fam != "ssm" else None
+    if fam == "moe":
+        mo, _ = M.moe_block(p["moe"], h2, cfg=cfg, mesh=mesh,
+                            batch_axes=batch_axes)
+        if cfg.moe_dense_residual:
+            mo = mo + swiglu(p["dense_mlp"], h2)
+        x = x + mo
+    elif fam == "audio":
+        x = x + gelu_mlp(p["mlp"], h2)
+    elif fam != "ssm":
+        x = x + swiglu(p["mlp"], h2)
+    return x, new
+
+
+def decoder_stack_decode(stacked, x, caches, *, cfg, mesh=None, batch_axes=(),
+                         use_pallas: bool = False):
+    """caches: LayerCache pytree with a leading layer axis on every leaf."""
+
+    def body(carry, inp):
+        lp, cache = inp
+        y, new_cache = decoder_layer_decode(lp, carry, cache, cfg=cfg,
+                                            mesh=mesh, batch_axes=batch_axes,
+                                            use_pallas=use_pallas)
+        return y, new_cache
+
+    x, new_caches = scan_or_unroll(body, x, (stacked, caches),
+                                   cfg.scan_layers)
+    return x, new_caches

@@ -1,0 +1,157 @@
+"""AdamW (no optax in this environment) with selectable moment precision.
+
+``moment_dtype``:
+  * float32 — standard;
+  * bfloat16 — halves optimizer HBM;
+  * int8 — blockwise-quantized moments (absmax per 256-value block, the
+    8-bit-Adam recipe): required to fit arctic-480b's 480B parameters on a
+    single 256-chip pod (DESIGN.md §2).
+
+State is a pytree mirroring the params, so it inherits the params' sharding
+(ZeRO-1 for free: sharded params => sharded moments).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantMoment:
+    """int8 moment with the SAME shape as its parameter.
+
+    ``q`` mirrors the parameter (so its sharding propagates 1:1 — a flat
+    block layout forces SPMD to replicate multi-TiB fp32 moments through
+    the dequantize/reshape, observed on arctic-480b); ``scale`` is the
+    per-last-dim absmax, shape = param.shape[:-1] + (1,).
+    """
+    q: jax.Array        # int8, same shape as the parameter
+    scale: jax.Array    # float32 absmax, shape[:-1] + (1,)
+    shape: tuple        # static original shape (aux data)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, children):
+        q, scale = children
+        return cls(q=q, scale=scale, shape=shape)
+
+
+def _quantize(x: jax.Array, sqrt_code: bool = False) -> QuantMoment:
+    """Last-dim absmax int8 (shape-preserving).  ``sqrt_code=True`` stores
+    sqrt(x) (for the non-negative second moment): linear int8 on v itself
+    zeroes small entries next to a large one, and m/sqrt(v~0) explodes —
+    the sqrt code compresses the dynamic range quadratically and dequant
+    applies a half-quantum floor, the standard 8-bit-Adam safeguard."""
+    shape = x.shape
+    if sqrt_code:
+        x = jnp.sqrt(jnp.maximum(x, 0.0))
+    if x.ndim == 0:
+        x = x[None]
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) + 1e-12
+    q = jnp.clip(jnp.round(x / scale * 127.0), -127, 127).astype(jnp.int8)
+    return QuantMoment(q=q.reshape(shape),
+                       scale=scale.astype(jnp.float32), shape=shape)
+
+
+def _dequantize(m: QuantMoment, sqrt_code: bool = False) -> jax.Array:
+    q = m.q.astype(jnp.float32)
+    if q.ndim == 0:
+        q = q[None]
+    if sqrt_code:
+        q = jnp.maximum(q, 0.5)  # half-quantum floor: sqrt(v) never exactly 0
+    out = (q / 127.0 * m.scale).reshape(m.shape)
+    return jnp.square(out) if sqrt_code else out
+
+
+def _zeros_moment(p: jax.Array, dtype: str, sqrt_code: bool = False):
+    if dtype == "int8":
+        return _quantize(jnp.zeros(p.shape, jnp.float32), sqrt_code)
+    return jnp.zeros(p.shape, jnp.bfloat16 if dtype == "bfloat16" else jnp.float32)
+
+
+def _read_moment(m, dtype: str, sqrt_code: bool = False) -> jax.Array:
+    if dtype == "int8":
+        return _dequantize(m, sqrt_code)
+    return m.astype(jnp.float32)
+
+
+def _write_moment(x: jax.Array, dtype: str, sqrt_code: bool = False):
+    if dtype == "int8":
+        return _quantize(x, sqrt_code)
+    return x.astype(jnp.bfloat16 if dtype == "bfloat16" else jnp.float32)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params, cfg: AdamWConfig) -> AdamWState:
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(lambda p: _zeros_moment(p, cfg.moment_dtype), params),
+        v=jax.tree.map(lambda p: _zeros_moment(p, cfg.moment_dtype, True),
+                       params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(params, grads, state: AdamWState, cfg: AdamWConfig,
+                 lr: jax.Array | float | None = None):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    lr = cfg.lr if lr is None else lr
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    is_q = cfg.moment_dtype == "int8"
+    is_leaf = (lambda x: isinstance(x, QuantMoment)) if is_q else None
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _read_moment(m, cfg.moment_dtype)
+        v_f = _read_moment(v, cfg.moment_dtype, True)
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g)
+        upd_ = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        p_new = p.astype(jnp.float32) - lr * (upd_ + cfg.weight_decay * p.astype(jnp.float32))
+        return (p_new.astype(p.dtype), _write_moment(m_f, cfg.moment_dtype),
+                _write_moment(v_f, cfg.moment_dtype, True))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = jax.tree.leaves(state.m, is_leaf=is_leaf) if is_q \
+        else treedef.flatten_up_to(state.m)
+    flat_v = jax.tree.leaves(state.v, is_leaf=is_leaf) if is_q \
+        else treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "step": step}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics

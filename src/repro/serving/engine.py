@@ -1,0 +1,97 @@
+"""Batched serving engine: static-batch continuous decoding.
+
+A fixed decode batch of ``slots``; requests are admitted into free slots,
+prefilled one at a time into their slot's cache region, and all live slots
+decode together every step (the serve_step the dry-run lowers).  Finished
+slots (EOS or max tokens) are retired and refilled — a compact version of
+the continuous-batching loop production servers run.
+
+The KV caches are the engine's state; per-slot admission writes a freshly
+prefilled cache into the batch dimension of the stacked caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new_tokens: int = 16
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
+                 eos_id: int = -1, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.queue: deque[Request] = deque()
+        self.active: list[Request | None] = [None] * slots
+        self.caches = model.init_caches(slots, max_len)
+        self._last_tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._serve = jax.jit(lambda p, c, t: model.serve_step(p, c, t))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill_step(p, b, max_len=max_len))
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            logits, fresh = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
+            tok = self._pick(logits)[0]
+            req.generated.append(int(tok))
+            # splice the prefilled slot-0 cache into this slot
+            self.caches = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(one[:, 0])
+                if hasattr(full, "at") else full,
+                self.caches, fresh)
+            self._last_tokens = self._last_tokens.at[slot, 0].set(tok)
+            self.active[slot] = req
+
+    def _pick(self, logits: jax.Array) -> jax.Array:
+        return jnp.argmax(logits[..., :self.model.cfg.vocab], axis=-1).astype(jnp.int32)
+
+    # -- one engine tick ------------------------------------------------------
+    def step(self) -> int:
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        logits, self.caches = self._serve(self.params, self.caches,
+                                          self._last_tokens)
+        toks = self._pick(logits)
+        for slot in live:
+            req = self.active[slot]
+            t = int(toks[slot])
+            req.generated.append(t)
+            self._last_tokens = self._last_tokens.at[slot, 0].set(t)
+            if t == self.eos_id or len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.active[slot] = None
+        return len(live)
+
+    def run(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self.queue or any(a is not None for a in self.active)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1

@@ -1,0 +1,31 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real (single) CPU device; multi-device tests spawn subprocesses."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+for p in (str(REPO), str(SRC)):
+    if p not in sys.path:
+        sys.path.insert(0, p)  # `pytest tests/` from anywhere finds repro + benchmarks
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 900) -> str:
+    """Run a python snippet in a subprocess with N host-platform devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout

@@ -1,0 +1,135 @@
+"""Attention + SSM numerics: chunked==full, sliding window, RoPE, SSD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+from repro.models import ssm as S
+
+RNG = np.random.default_rng(7)
+
+
+def _qkv(B, Sq, H, K, D, T=None):
+    T = T or Sq
+    q = jnp.asarray(RNG.normal(size=(B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, T, K, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, T, K, D)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S_,qc,kc", [(1024, 256, 256), (2048, 512, 1024),
+                                      (512, 128, 512)])
+@pytest.mark.parametrize("window", [0, 256])
+def test_chunked_equals_full(S_, qc, kc, window):
+    q, k, v = _qkv(2, S_, 4, 2, 32)
+    full = A.full_attention(q, k, v, causal=True, window=window)
+    chunk = A.chunked_attention(q, k, v, causal=True, window=window,
+                                q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)
+
+
+@given(seed=st.integers(0, 2**16), window=st.sampled_from([0, 64, 128]))
+@settings(max_examples=8, deadline=None)
+def test_chunked_equals_full_property(seed, window):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(1, 512, 4, 16)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(1, 512, 4, 16)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(1, 512, 4, 16)), jnp.float32)
+    full = A.full_attention(q, k, v, causal=True, window=window)
+    chunk = A.chunked_attention(q, k, v, causal=True, window=window,
+                                q_chunk=128, kv_chunk=128)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(full),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_sliding_window_masks_history():
+    """With window=W a query must be independent of keys older than W."""
+    S_, W = 256, 64
+    q, k, v = _qkv(1, S_, 2, 2, 16)
+    out1 = A.full_attention(q, k, v, causal=True, window=W)
+    k2 = k.at[:, :S_ - W - 1].set(RNG.normal(size=(1, S_ - W - 1, 2, 16)))
+    v2 = v.at[:, :S_ - W - 1].set(RNG.normal(size=(1, S_ - W - 1, 2, 16)))
+    out2 = A.full_attention(q, k2, v2, causal=True, window=W)
+    np.testing.assert_allclose(np.asarray(out1[:, -1]), np.asarray(out2[:, -1]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on (m-n)."""
+    D = 32
+    inv = A.rope_frequencies(D, 1.0, 10000.0)
+    q = jnp.asarray(RNG.normal(size=(1, 1, 1, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 1, 1, D)), jnp.float32)
+
+    def dot(m, n):
+        qm = A.apply_rope(q, jnp.array([[m]]), inv)
+        kn = A.apply_rope(k, jnp.array([[n]]), inv)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot(5, 3) - dot(102, 100)) < 1e-3
+    assert abs(dot(7, 7) - dot(0, 0)) < 1e-3
+
+
+def test_partial_rope_leaves_tail_untouched():
+    D = 32
+    inv = A.rope_frequencies(D, 0.5, 1e4)  # chatglm 2d convention
+    x = jnp.asarray(RNG.normal(size=(1, 4, 2, D)), jnp.float32)
+    y = A.apply_rope(x, jnp.arange(4)[None], inv)
+    np.testing.assert_array_equal(np.asarray(y[..., D // 2:]),
+                                  np.asarray(x[..., D // 2:]))
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunk_invariance(chunk):
+    """SSD output must not depend on the chunk size (algebraic identity)."""
+    b, s, h, p, n = 1, 64, 2, 8, 4
+    x = jnp.asarray(RNG.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.random((b, s, h)) * 0.5 + 0.1, jnp.float32)
+    Amat = -jnp.asarray(RNG.random(h) + 0.1, jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, s, 1, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, s, 1, n)), jnp.float32)
+    y8, st8 = S.ssd_chunked(x, dt, Amat, B, C, 8)
+    yc, stc = S.ssd_chunked(x, dt, Amat, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(y8),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(stc), np.asarray(st8),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_ssd_equals_naive_recurrence():
+    """Chunked SSD == step-by-step linear recurrence (the SSM side of the
+    state-space duality)."""
+    b, s, h, p, n = 1, 32, 2, 4, 8
+    x = jnp.asarray(RNG.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(RNG.random((b, s, h)) * 0.5 + 0.1, jnp.float32)
+    Amat = -jnp.asarray(RNG.random(h) + 0.1, jnp.float32)
+    B = jnp.asarray(RNG.normal(size=(b, s, 1, n)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(b, s, 1, n)), jnp.float32)
+    y, final = S.ssd_chunked(x, dt, Amat, B, C, 8)
+
+    state = np.zeros((b, h, p, n), np.float64)
+    ys = np.zeros((b, s, h, p), np.float64)
+    for t in range(s):
+        dA = np.exp(np.asarray(dt[:, t]) * np.asarray(Amat))    # (b,h)
+        Bb = np.repeat(np.asarray(B[:, t]), h, axis=1)           # (b,h,n)
+        Cb = np.repeat(np.asarray(C[:, t]), h, axis=1)
+        upd = np.einsum("bh,bhp,bhn->bhpn", np.asarray(dt[:, t]),
+                        np.asarray(x[:, t]), Bb)
+        state = state * dA[..., None, None] + upd
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", state, Cb)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), state, rtol=2e-3, atol=2e-4)
+
+
+def test_decode_attention_matches_full():
+    B, H, K, D, W = 2, 4, 2, 16, 32
+    q1, k, v = _qkv(B, 1, H, K, D, T=W)
+    q = q1[:, 0]
+    valid = jnp.ones((B, W), bool)
+    dec = A.decode_attention(q, k, v, valid)
+    full = A.full_attention(q1, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, 0]),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,124 @@
+"""Core graph IR + vertical/horizontal optimization passes."""
+import numpy as np
+import pytest
+
+from repro.core import (DeviceSpec, Graph, execute, init_params, optimize,
+                        optimize_timed)
+from repro.core import dos, linking, patterns
+from repro.core.graph import OP_VOCABULARY
+from repro.configs import cnn_zoo
+
+
+@pytest.mark.parametrize("name", sorted(cnn_zoo.ZOO))
+def test_zoo_builds_and_toposorts(name):
+    g = cnn_zoo.build(name)
+    assert g.toposorted()
+    assert g.outputs
+    for n in g.nodes:
+        assert n.op_type in OP_VOCABULARY
+
+
+@pytest.mark.parametrize("name", sorted(cnn_zoo.ZOO))
+def test_optimized_graph_equivalent(name):
+    """VO+HO rewrite must be semantics-preserving (the paper's 'equivalent
+    optimized model')."""
+    g = cnn_zoo.build(name)
+    opt = optimize(g)
+    params = init_params(g)
+    rng = np.random.default_rng(0)
+    inputs = {i: rng.normal(size=g.tensors[i].shape).astype("float32")
+              for i in g.inputs}
+    ref = execute(g, params, inputs, mode="vanilla")
+    out = execute(opt, params, inputs, mode="xenos")
+    for a, b in zip(ref, out):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-5)
+
+
+def test_cbr_fusion_reduces_ops():
+    g = cnn_zoo.build("mobilenet")
+    fused = linking.fuse_cbr(g)
+    assert fused.num_ops() < g.num_ops()
+    assert any(n.op_type == "cbr" for n in fused.nodes)
+    # provenance metadata kept (no new op types invented)
+    for n in fused.nodes:
+        if n.op_type == "cbr":
+            assert n.dataflow["fused_from"]
+
+
+def test_linking_finds_table1_patterns():
+    g = linking.fuse_cbr(cnn_zoo.build("mobilenet"))
+    kinds = {m.kind for m in patterns.find_link_patterns(g)}
+    assert "conv_conv" in kinds  # dwconv -> conv1x1 chains
+    g2 = linking.fuse_cbr(cnn_zoo.build("bert_s"))
+    kinds2 = {m.kind for m in patterns.find_link_patterns(g2)}
+    assert "matmul_matmul" in kinds2
+    g3 = linking.fuse_cbr(cnn_zoo.build("resnet18"))
+    assert patterns.find_link_patterns(g3)
+
+
+def test_linked_op_created():
+    g = linking.optimize(cnn_zoo.build("shufflenet"))
+    assert any(n.op_type in ("cbra", "cbrm") for n in g.nodes)
+
+
+def test_dos_priorities():
+    """§4.2.1: outC first; inH/inW only if outC can't fill the units."""
+    g = cnn_zoo.build("mobilenet")
+    dev = DeviceSpec(n_units=8, l2_bytes=512 * 1024)
+    opt = dos.optimize(g, dev)
+    plans = dos.plans(opt)
+    assert plans
+    for name, plan in plans.items():
+        node = opt.node_by_name(name)
+        dims = dos._dims_of(node, opt.tensors)
+        if dims.get("outC", 0) % 8 == 0:
+            assert plan.fmap_parts.get("outC") == 8, (name, plan)
+
+
+def test_dos_param_split_fits_l2():
+    """§4.2.2: split until each chunk fits private memory, K dim first."""
+    g = Graph("big_fc")
+    x = g.add_input("x", (1, 4096), layout="")
+    from repro.core import graph as G
+    y = G.matmul(g, x, 8192)
+    g.mark_output(y)
+    dev = DeviceSpec(n_units=4, l2_bytes=1024 * 1024)  # 1 MB L2
+    opt = dos.optimize(g, dev)
+    plan = next(iter(dos.plans(opt).values()))
+    assert plan.param_chunks, "param split must trigger for a 128 MB weight"
+    assert "K" in plan.param_chunks or "inC" in plan.param_chunks
+
+
+def test_dos_uneven_records_imbalance():
+    g = Graph("odd")
+    x = g.add_input("x", (1, 8, 8, 3))
+    from repro.core import graph as G
+    y = G.conv2d(g, x, 7, 3)  # 7 outC over 8 units -> imbalance
+    g.mark_output(y)
+    opt = dos.optimize(g, DeviceSpec(n_units=8))
+    plan = next(iter(dos.plans(opt).values()))
+    assert plan.imbalance > 0 or plan.total_parts <= 8
+
+
+def test_auto_optimization_under_one_second():
+    """Table 2: automatic optimization cost 0.11-0.91 s on full models; the
+    reduced zoo must stay well under a second."""
+    for name in cnn_zoo.ZOO:
+        _, dt = optimize_timed(cnn_zoo.build(name))
+        assert dt < 1.0, (name, dt)
+
+
+def test_engine_modes_agree():
+    g = cnn_zoo.build("squeezenet")
+    opt = optimize(g)
+    params = init_params(g)
+    rng = np.random.default_rng(1)
+    inputs = {i: rng.normal(size=g.tensors[i].shape).astype("float32")
+              for i in g.inputs}
+    outs = {m: execute(opt if m == "xenos" else g, params, inputs, mode=m)
+            for m in ("vanilla", "ho", "xenos")}
+    for m in ("ho", "xenos"):
+        for a, b in zip(outs["vanilla"], outs[m]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-4, atol=3e-5)

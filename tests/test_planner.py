@@ -1,0 +1,95 @@
+"""d-Xenos planner (Algorithm 1) + cost model properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import cnn_zoo
+from repro.core import costmodel as cm
+from repro.core import planner
+from repro.core.dos import DeviceSpec
+
+
+def test_enumerate_schemes_products():
+    for n in (2, 4, 8):
+        for s in planner.enumerate_schemes(n):
+            prod = 1
+            for _, p in s.parts:
+                prod *= p
+            assert prod == n
+
+
+def test_algorithm1_returns_argmin():
+    dset = planner.enumerate_schemes(8)
+    costs = {str(s): float(i) for i, s in enumerate(dset)}
+    best, t = planner.algorithm1(dset, lambda s: costs[str(s)])
+    assert t == 0.0 and str(best) == str(dset[0])
+
+
+def test_ring_beats_ps_when_params_replicated():
+    """Fig. 11 takeaway (1): ring all-reduce must beat PS for inH/inW
+    partitions (replicated parameters)."""
+    g = cnn_zoo.build("mobilenet")
+    scheme = planner.Scheme.single("inH", 4)
+    ring = planner.model_scheme_time(g, scheme, 4, sync="ring")
+    ps = planner.model_scheme_time(g, scheme, 4, sync="ps")
+    assert ring.collective_s < ps.collective_s
+
+
+def test_outc_partition_avoids_param_sync():
+    """outC partition distributes parameters -> no sync cost; §4.2.1's
+    rationale for the outC-first priority."""
+    g = cnn_zoo.build("mobilenet")
+    outc = planner.model_scheme_time(g, planner.Scheme.single("outC", 4), 4)
+    inh = planner.model_scheme_time(g, planner.Scheme.single("inH", 4), 4)
+    assert outc.collective_s < inh.collective_s
+
+
+def test_plan_distributed_picks_best():
+    g = cnn_zoo.build("mobilenet")
+    best, best_t, all_times = planner.plan_distributed(g, 4)
+    assert best_t == min(all_times.values())
+    assert str(best) in all_times
+
+
+def test_plan_mix_per_op():
+    g = cnn_zoo.build("squeezenet")
+    mix = planner.plan_mix(g, 4)
+    assert mix and all(isinstance(s, planner.Scheme) for s in mix.values())
+
+
+@given(flops=st.floats(1e6, 1e15), bytes_=st.floats(1e3, 1e12),
+       coll=st.floats(0, 1e12), chips=st.integers(1, 512))
+@settings(max_examples=50, deadline=None)
+def test_roofline_properties(flops, bytes_, coll, chips):
+    t = cm.roofline(flops, bytes_, coll, chips)
+    assert t.bound_s <= t.serial_s
+    assert t.dominant in ("compute", "memory", "collective")
+    assert math.isclose(t.serial_s,
+                        t.compute_s + t.memory_s + t.collective_s)
+    # scaling down chips scales terms up
+    t2 = cm.roofline(flops, bytes_, coll, chips * 2)
+    assert t2.bound_s <= t.bound_s + 1e-12
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ar = f32[1024,256] all-reduce(f32[1024,256] %p), replica_groups={}
+  %ag = bf16[512]{0} all-gather(bf16[256]{0} %q), dimensions={0}
+  ROOT %cp = f32[128,128] collective-permute(f32[128,128] %r)
+  %notacoll = f32[2,2] add(f32[2,2] %a, f32[2,2] %b)
+"""
+    out = cm.collective_bytes_from_hlo(hlo)
+    assert out["all-reduce"] == 1024 * 256 * 4
+    assert out["all-gather"] == 512 * 2
+    assert out["collective-permute"] == 128 * 128 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_scheme_padding_waste_penalized():
+    """A partition that does not divide the dim must cost more compute."""
+    g = cnn_zoo.build("mobilenet")
+    even = planner.model_scheme_time(g, planner.Scheme.single("outC", 4), 4)
+    # inH=7 does not divide typical feature map heights evenly
+    odd = planner.model_scheme_time(g, planner.Scheme.single("inH", 7), 7)
+    assert odd.compute_s * 7 >= even.compute_s * 4 * 0.9

@@ -1,0 +1,98 @@
+"""Unit tests for the DOS sharding ladder (pure functions, no devices)."""
+import json
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.models.layers import ParamSpec
+
+
+class FakeMesh:
+    def __init__(self, sizes):
+        self.shape = dict(sizes)
+        self.axis_names = tuple(sizes)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def spec(shape, axes):
+    rules = SH.rules_for(type("C", (), {"sharding_overrides": ()})(), MESH)
+    return SH.spec_for_axes(axes, rules, shape, MESH)
+
+
+def test_outc_first_even():
+    # heads divisible by 16 -> sharded on model (the paper's outC split)
+    assert spec((4096, 64, 128), ("embed", "heads", None)) == P(None, "model", None)
+
+
+def test_fallback_to_embed_when_heads_uneven():
+    # 56 heads (arctic) cannot split 16 ways -> ladder moves model to embed
+    s = spec((7168, 56, 128), ("embed", "heads", None))
+    assert s == P("model", None, None)
+
+
+def test_fallback_drops_when_nothing_divides():
+    # nothing divisible -> replicated, never an invalid sharding
+    s = spec((7, 5, 3), ("embed", "heads", None))
+    assert s == P(None, None, None)
+
+
+def test_vocab_padding_divides():
+    from repro.configs.base import all_configs
+    for name, cfg in all_configs().items():
+        assert cfg.padded_vocab() % 16 == 0, name
+        assert cfg.padded_vocab() >= cfg.vocab
+
+
+def test_batch_axes_for():
+    class M:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+    assert SH.batch_axes_for(M(), 256) == ("pod", "data")
+    assert SH.batch_axes_for(M(), 128) == ("pod", "data")
+    assert SH.batch_axes_for(M(), 16) == ("data",)
+    assert SH.batch_axes_for(M(), 1) == ()
+
+
+def test_enforce_divisible_relocates():
+    import numpy as np
+
+    from repro.distributed.state_sharding import enforce_divisible
+
+    class M:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    # kv=5 cache: model cannot sit on dim 3, relocates to head_dim (64)
+    out = enforce_divisible(P(None, "data", None, "model", None),
+                            (32, 128, 1024, 5, 64), M())
+    assert out == P(None, "data", None, None, "model")
+    # fully divisible: unchanged
+    out2 = enforce_divisible(P(None, "data", None, "model", None),
+                             (32, 128, 1024, 16, 64), M())
+    assert out2 == P(None, "data", None, "model", None)
+
+
+def test_report_tables(tmp_path):
+    from benchmarks import report
+    rec = {"arch": "a", "shape": "s", "mesh": "single",
+           "flops_per_device": 1e12, "bytes_per_device": 1e9,
+           "collective_bytes_per_device": 1e8,
+           "collectives": {"all-reduce": 1e8},
+           "memory": {"peak_estimate": 2**30},
+           "fits_hbm": True,
+           "model_flops_per_device": 9e11, "useful_flops_ratio": 0.9,
+           "calibrated": {"flops": 1e12, "bytes": 1e9,
+                          "collective_bytes": 1e8, "compute_s": 5e-3,
+                          "memory_s": 1e-3, "collective_s": 2e-3,
+                          "dominant": "compute", "bound_s": 5e-3,
+                          "useful_flops_ratio": 0.9}}
+    p = tmp_path / "r.jsonl"
+    p.write_text(json.dumps(rec) + "\n")
+    recs = report.load(str(p))
+    t1 = report.dryrun_table(recs, "single")
+    t2 = report.roofline_table(recs, "single")
+    assert "| a | s |" in t1 and "compute" in t2
