@@ -18,7 +18,7 @@ import sys
 from pathlib import Path
 
 from repro.configs import cnn_zoo
-from repro.core import planner
+from repro.core import pipeline, planner
 
 from .common import emit
 
@@ -91,7 +91,13 @@ def run() -> None:
                 t = planner.model_scheme_time(
                     g, planner.Scheme.single(dim, 4), 4, sync=sync).serial_s
                 rows[f"{sync}-{dim}"] = t
-        best, best_t, all_t = planner.plan_distributed(g, 4, sync="ring")
+        # the planner runs as the pipeline's opt-in dxenos_plan pass
+        # (annotate=False: only the whole-graph scheme is needed here)
+        _, rep = pipeline.optimize(
+            g, passes=("dxenos_plan",),
+            options={"n_devices": 4, "sync": "ring", "annotate": False})
+        summ = rep.passes[0].summary
+        best, best_t = summ["best_scheme"], summ["best_modeled_s"]
         rows["ring-mix"] = best_t
         for k, t in sorted(rows.items(), key=lambda kv: kv[1]):
             emit(f"fig11.{name}.{k}", t,

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import cnn_zoo
-from repro.core import DeviceSpec, Engine, init_params, linking, optimize
+from repro.core import DeviceSpec, build_engine, init_params
 from repro.core.planner import Scheme, model_scheme_time
 
 from .common import emit, timeit
@@ -26,16 +26,20 @@ def run() -> None:
     dev = DeviceSpec.tms320c6678()
     for name in sorted(cnn_zoo.ZOO):
         g = cnn_zoo.build(name)
-        g_ho = optimize(g, dev, vertical=False)       # HO only
-        g_full = optimize(g, dev)                     # HO + VO
+        # each mode's graph comes from the pass pipeline (vanilla: no passes,
+        # ho: dos_split only, xenos: fuse+link+dos) — one entry point
+        eng_van, _ = build_engine(g, "vanilla", dev)
+        eng_ho, _ = build_engine(g, "ho", dev)
+        eng_x, rep_x = build_engine(g, "xenos", dev)
+        g_ho, g_full = eng_ho.graph, eng_x.graph
         params = init_params(g)
         rng = np.random.default_rng(0)
         inputs = [jnp.asarray(rng.normal(size=g.tensors[i].shape), jnp.float32)
                   for i in g.inputs]
 
-        t_van = timeit(Engine(g, "vanilla"), params, *inputs)
-        t_ho = timeit(Engine(g_ho, "ho"), params, *inputs)
-        t_x = timeit(Engine(g_full, "xenos"), params, *inputs)
+        t_van = timeit(eng_van, params, *inputs)
+        t_ho = timeit(eng_ho, params, *inputs)
+        t_x = timeit(eng_x, params, *inputs)
 
         # modeled times (8 units): vanilla = 1 unit serial, ho/xenos = 8 units,
         # xenos additionally drops linked intermediates from memory traffic
@@ -51,7 +55,8 @@ def run() -> None:
              f"modeled_us={m_ho*1e6:.1f};HO_reduction={ho_red:.1f}%")
         emit(f"fig7.{name}.xenos", t_x,
              f"modeled_us={m_x*1e6:.1f};VO_further_reduction={vo_red:.1f}%;"
-             f"wallclock_speedup_vs_vanilla={t_van/t_x:.2f}x")
+             f"wallclock_speedup_vs_vanilla={t_van/t_x:.2f}x;"
+             f"pipeline_ms={rep_x.total_s*1e3:.2f}")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import cnn_zoo
-from repro.core import Engine, init_params, optimize
+from repro.core import Engine, init_params, pipeline
 from repro.core.engine import eval_op
 
 from .common import emit, timeit
@@ -25,7 +25,7 @@ def run() -> None:
         g = cnn_zoo.build(name)
         # wall-clock uses the VO (linking) rewrite; HO's split targets the
         # TPU VMEM tier and has no meaning on a 1-core CPU (DESIGN.md §2)
-        opt = optimize(g, horizontal=False)
+        opt, _ = pipeline.optimize(g, level=2)  # O2 = fuse_cbr + link_operators
         params = init_params(g)
         rng = np.random.default_rng(0)
         inputs = [jnp.asarray(rng.normal(size=g.tensors[i].shape), jnp.float32)

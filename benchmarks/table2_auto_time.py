@@ -5,8 +5,8 @@ well under that, scaling with op count.
 """
 from __future__ import annotations
 
+from repro.core import pipeline
 from repro.configs import cnn_zoo
-from repro.core import optimize_timed
 
 from .common import emit
 
@@ -15,13 +15,17 @@ def run() -> None:
     for name in sorted(cnn_zoo.ZOO):
         g = cnn_zoo.build(name)
         # median of 3 (the pass is deterministic; guard against timer noise)
-        times = []
+        runs = []
         for _ in range(3):
-            _, dt = optimize_timed(g)
-            times.append(dt)
-        times.sort()
-        emit(f"table2.{name}", times[1],
-             f"ops={g.num_ops()};paper_range=0.11-0.91s_full_models")
+            _, report = pipeline.optimize(g)
+            runs.append(report)
+        runs.sort(key=lambda r: r.total_s)
+        rep = runs[1]
+        per_pass = ";".join(f"{p.name}_us={p.wall_s * 1e6:.0f}"
+                            for p in rep.passes)
+        emit(f"table2.{name}", rep.total_s,
+             f"ops={g.num_ops()};{per_pass};"
+             f"paper_range=0.11-0.91s_full_models")
 
 
 if __name__ == "__main__":

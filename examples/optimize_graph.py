@@ -8,8 +8,8 @@ split plans (§4.2), and the d-Xenos partition-scheme search (Algorithm 1).
 """
 import numpy as np
 
-from repro.core import DeviceSpec, Graph, execute, init_params
-from repro.core import dos, linking, patterns, planner
+from repro.core import DeviceSpec, Graph, execute, init_params, pipeline
+from repro.core import dos, patterns, planner
 from repro.core import graph as G
 
 
@@ -33,20 +33,18 @@ def main():
     ident = patterns.identify(g)
     print(f"identified fusions: {[m.nodes for m in ident['fusions']]}")
 
-    fused = linking.fuse_cbr(g)
-    print(f"after CBR fusion (Fig 5a): {[n.op_type for n in fused.nodes]}")
-
-    linked = linking.link(fused)
-    print(f"after operator linking (Fig 5b, CBRA): "
-          f"{[n.op_type for n in linked.nodes]}")
-    cbra = next(n for n in linked.nodes if n.op_type == "cbra")
-    print(f"  linked-op dataflow metadata: {cbra.dataflow}")
-
+    # the pass manager runs fuse_cbr -> link_operators -> dos_split, verifies
+    # the graph after every rewrite, and reports what each pass did
     dev = DeviceSpec.tms320c6678()
-    opt = dos.optimize(linked, dev)
+    opt, report = pipeline.optimize(g, dev)
+    print(f"after the pipeline (Fig 5a/5b, CBRA): "
+          f"{[n.op_type for n in opt.nodes]}")
+    cbra = next(n for n in opt.nodes if n.op_type == "cbra")
+    print(f"  linked-op dataflow metadata: {cbra.dataflow}")
     for name, plan in dos.plans(opt).items():
         print(f"DOS plan for {name} (Fig 5d/e): fmap_parts={plan.fmap_parts} "
               f"param_chunks={plan.param_chunks} fits_l2={plan.fits_l2}")
+    print(report.format())
 
     # equivalence
     params = init_params(g)
@@ -57,9 +55,13 @@ def main():
     print(f"optimized == original: max err {err:.2e}")
     assert err < 1e-4
 
-    # d-Xenos planning (Algorithm 1 over the Figure-6 scheme set)
+    # d-Xenos planning (Algorithm 1 over the Figure-6 scheme set) as the
+    # opt-in `dxenos_plan` pass: annotates compute ops with their best scheme
+    planned, dreport = pipeline.optimize(
+        g, passes=("dxenos_plan",), options={"n_devices": 4})
+    print(f"\ndxenos_plan pass: {dreport.passes[0].summary}")
     best, best_t, all_t = planner.plan_distributed(g, n_devices=4)
-    print("\nd-Xenos schemes (4 devices, modeled):")
+    print("d-Xenos schemes (4 devices, modeled):")
     for k, v in sorted(all_t.items(), key=lambda kv: kv[1]):
         mark = " <= best" if k == str(best) else ""
         print(f"  {k:24s} {v * 1e6:9.1f} us{mark}")

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs import cnn_zoo
 from repro.configs.base import get_config
-from repro.core import DeviceSpec, Engine, init_params, optimize_timed
+from repro.core import DeviceSpec, Engine, init_params, pipeline
 from repro.core.linking import link_groups
 from repro.models.model import Model
 
@@ -24,18 +24,23 @@ from repro.models.model import Model
 def cnn_side():
     print("== Xenos graph optimization (the paper's CNN path) ==")
     g = cnn_zoo.build("mobilenet")
-    opt, dt = optimize_timed(g, DeviceSpec.tms320c6678())
+    # one entry point: the pass pipeline (fuse -> link -> DOS split), with
+    # per-pass timing and verification built in
+    opt, report = pipeline.optimize(g, DeviceSpec.tms320c6678())
     print(f"model={g.name}: {g.num_ops()} ops -> {opt.num_ops()} ops "
-          f"in {dt * 1e3:.1f} ms (Table-2 analogue)")
+          f"in {report.total_s * 1e3:.1f} ms (Table-2 analogue)")
     linked = [n.op_type for n in opt.nodes if n.op_type in ("cbr", "cbra", "cbrm")]
     print(f"fused/linked ops: {linked}")
     print(f"link groups: {len(link_groups(opt))}")
+    print(report.format())
 
     params = init_params(g)
     x = jnp.asarray(np.random.default_rng(0).normal(
         size=g.tensors[g.inputs[0]].shape), jnp.float32)
 
-    for mode, graph in [("vanilla", g), ("xenos", opt)]:
+    # reuse the pipeline's output for xenos mode; vanilla runs the raw graph
+    # (build_engine(g, mode) bundles both steps when no report is needed)
+    for mode, graph in (("vanilla", g), ("xenos", opt)):
         eng = Engine(graph, mode)
         eng(params, x)  # compile
         t0 = time.perf_counter()

@@ -42,6 +42,10 @@ def main(argv=None):
     toks = sum(len(r.generated) for r in reqs)
     print(f"{done}/{len(reqs)} done, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s, {args.slots} slots)")
+    stats = engine.stats()
+    for stage, s in stats["stages"].items():
+        print(f"  stage {stage}: {s['calls']} calls, "
+              f"mean {s['mean_s'] * 1e3:.2f} ms")
     assert done == len(reqs)
     print("serve_batch OK")
 

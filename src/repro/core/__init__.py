@@ -1,28 +1,47 @@
 """Xenos core: dataflow-centric computation-graph optimization.
 
-Pipeline (paper §3/§4):
-    fuse (Conv+Bn+Relu -> CBR)  ->  link (VO, §4.1)  ->  DOS split (HO, §4.2)
-plus the d-Xenos distributed planner (§5).
+Pipeline (paper §3/§4, run by the pass manager in core/pipeline.py):
+    fuse_cbr (Conv+Bn+Relu -> CBR)  ->  link_operators (VO, §4.1)
+    ->  dos_split (HO, §4.2)  [->  dxenos_plan (§5, opt-in)]
+
+``optimize`` keeps the historical Graph-in/Graph-out signature;
+``pipeline.optimize`` is the instrumented entry point returning
+``(graph, PassReport)``.
 """
 from __future__ import annotations
 
 import time
 
-from . import costmodel, dos, engine, graph, linking, patterns, planner
+from . import costmodel, dos, engine, graph, linking, patterns, pipeline, planner
 from .dos import DeviceSpec
-from .engine import Engine, execute, init_params
+from .engine import Engine, build_engine, execute, init_params
 from .graph import Graph
+from .pipeline import (Pass, PassReport, PassVerificationError, optimize_for_mode,
+                       verify_graph)
 
 
 def optimize(g: Graph, device: DeviceSpec | None = None,
              vertical: bool = True, horizontal: bool = True) -> Graph:
-    """The full automatic optimization workflow (§4.4)."""
-    out = g
-    if vertical:
-        out = linking.optimize(out)
-    if horizontal:
-        out = dos.optimize(out, device)
+    """The full automatic optimization workflow (§4.4), via the pass manager.
+
+    ``vertical``/``horizontal`` toggle the VO (fuse+link) and HO (DOS split)
+    pass groups — the Fig.-7 ablation axes.  Use :func:`optimize_report` /
+    ``pipeline.optimize`` when you also want the :class:`PassReport`.
+    """
+    out, _ = optimize_report(g, device, vertical=vertical, horizontal=horizontal)
     return out
+
+
+def optimize_report(g: Graph, device: DeviceSpec | None = None,
+                    vertical: bool = True, horizontal: bool = True,
+                    ) -> tuple[Graph, PassReport]:
+    """Like :func:`optimize` but also returns the structured PassReport."""
+    passes: list[str] = []
+    if vertical:
+        passes += ["fuse_cbr", "link_operators"]
+    if horizontal:
+        passes += ["dos_split"]
+    return pipeline.optimize(g, device, passes=passes)
 
 
 def optimize_timed(g: Graph, device: DeviceSpec | None = None) -> tuple[Graph, float]:
@@ -33,7 +52,9 @@ def optimize_timed(g: Graph, device: DeviceSpec | None = None) -> tuple[Graph, f
 
 
 __all__ = [
-    "Graph", "Engine", "DeviceSpec", "execute", "init_params", "optimize",
-    "optimize_timed", "graph", "patterns", "linking", "dos", "planner",
-    "costmodel", "engine",
+    "Graph", "Engine", "DeviceSpec", "Pass", "PassReport",
+    "PassVerificationError", "build_engine", "execute", "init_params",
+    "optimize", "optimize_report", "optimize_timed", "optimize_for_mode",
+    "verify_graph", "graph", "patterns", "linking", "dos", "planner",
+    "costmodel", "engine", "pipeline",
 ]

@@ -20,6 +20,10 @@ Three execution modes mirror the paper's Fig.-7 ablation:
 The engine is also where linked ops (``cbra``/``cbrm``) may lower to the
 Pallas kernels in ``repro.kernels`` (``use_pallas=True``), demonstrating the
 kernel-level version of operator linking.
+
+Graphs should be optimized through the pass manager (core/pipeline.py)
+rather than by calling stages directly; ``build_engine`` below does both
+steps — per-mode pipeline then Engine — and returns the PassReport.
 """
 from __future__ import annotations
 
@@ -265,3 +269,18 @@ def execute(g: Graph, params: dict[str, jax.Array], inputs: dict[str, Any],
     eng = Engine(g, mode, use_pallas)
     ins = [jnp.asarray(inputs[name]) for name in g.inputs]
     return eng(params, *ins)
+
+
+def build_engine(g: Graph, mode: str = "xenos",
+                 device=None, use_pallas: bool = False):
+    """Optimize ``g`` for ``mode`` through the pass pipeline, then wrap it.
+
+    This is the one-stop path callers should use instead of hand-wiring
+    ``fuse_cbr -> link -> dos`` themselves: ``vanilla`` runs no passes,
+    ``ho`` runs ``dos_split`` only, ``xenos`` the full default pipeline.
+    Returns ``(Engine, PassReport)`` — the report carries per-pass wall
+    times, node/edge deltas and the modeled cost saving.
+    """
+    from .pipeline import optimize_for_mode
+    opt, report = optimize_for_mode(g, mode, device)
+    return Engine(opt, mode, use_pallas), report

@@ -1,0 +1,546 @@
+"""Unified optimization pass manager (the §4.4 "automatic workflow" as a subsystem).
+
+The paper's pitch is that dataflow optimization is *automatic*: pattern
+identification, vertical linking (§4.1), horizontal split (§4.2) and the
+d-Xenos planner (§5) run over the computation graph without per-model
+hand-wiring.  This module is that workflow as a first-class object:
+
+  * every optimization stage is a registered :class:`Pass` with a name,
+    a description, and declared post-invariants;
+  * :func:`optimize` is the single entry point — it runs a pass list (or a
+    numbered level), verifies the graph after every rewrite, and returns the
+    optimized graph together with a structured :class:`PassReport` (per-pass
+    wall time, node/edge deltas, link-group and split-plan summaries, and the
+    modeled cost savings of the whole pipeline);
+  * :func:`verify_graph` is the post-pass checker: dangling edges, producer
+    consistency, layout validity, and link-group well-formedness.  A rewrite
+    that corrupts the graph raises :class:`PassVerificationError` at the pass
+    that introduced it, not three stages later.
+
+Registered passes (see the bottom of this file):
+
+  ==============  ============================================================
+  ``fuse_cbr``        preprocessing fusion Conv+Bn(+Bias)+Relu -> CBR (§3)
+  ``link_operators``  vertical optimization: Table-1 linking (§4.1)
+  ``dos_split``       horizontal optimization: DSP-aware operator split (§4.2)
+  ``dxenos_plan``     d-Xenos partition-scheme planning, Algorithm 1 (§5)
+  ==============  ============================================================
+
+Levels are cumulative pass prefixes (``dxenos_plan`` is opt-in because it
+needs an ``n_devices`` choice):
+
+  ==========  =================================================
+  ``O0``      no passes (the Fig.-7 *vanilla* dataflow)
+  ``O1``      ``fuse_cbr``
+  ``O2``      + ``link_operators``  (VO; Fig.-7 *xenos* minus HO)
+  ``O3``      + ``dos_split``       (VO + HO; the default)
+  ==========  =================================================
+
+New optimizations (fusion patterns, caching, multi-backend lowering) are
+drop-in: define a function ``Graph -> Graph`` and register it with
+:func:`register_pass` / the :func:`graph_pass` decorator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable, Sequence
+
+from . import costmodel as cm
+from . import dos, linking
+from .dos import DeviceSpec
+from .graph import Graph, LAYOUTS, OP_VOCABULARY, OpNode
+
+
+# ---------------------------------------------------------------------------
+# Errors
+# ---------------------------------------------------------------------------
+
+class PipelineError(ValueError):
+    """Bad pipeline configuration (unknown pass / level)."""
+
+
+class PassVerificationError(RuntimeError):
+    """A pass produced a graph that fails :func:`verify_graph`."""
+
+    def __init__(self, pass_name: str, problems: Sequence[str]):
+        self.pass_name = pass_name
+        self.problems = list(problems)
+        detail = "\n  - ".join(self.problems)
+        super().__init__(
+            f"pass {pass_name!r} corrupted the graph:\n  - {detail}")
+
+
+# ---------------------------------------------------------------------------
+# Graph verification
+# ---------------------------------------------------------------------------
+
+def verify_graph(g: Graph) -> list[str]:
+    """Structural checks every rewrite must preserve.  Returns problems found.
+
+    * every tensor a node reads/writes exists, and producers are consistent
+      (no dangling edges after a splice);
+    * nodes appear in topological order and op types stay inside the closed
+      Table-3 vocabulary;
+    * rank-4 feature maps carry a known layout (``NHWC``/``NCHW``; non-rank-4
+      tensors use the empty layout);
+    * link groups are well-formed: at least two members, and the members form
+      a connected region of the graph (linking is defined on *adjacent*
+      operators — a group split across unrelated subgraphs is a bad rewrite).
+    """
+    problems: list[str] = []
+    node_names = {n.name for n in g.nodes}
+    if len(node_names) != len(g.nodes):
+        problems.append("duplicate node names")
+
+    # -- tensor / edge consistency ------------------------------------------
+    produced: set[str] = set(g.inputs) | set(g.params)
+    for n in g.nodes:
+        for t in list(n.inputs) + list(n.params):
+            if t not in g.tensors:
+                problems.append(f"{n.name} reads dangling tensor {t!r}")
+            elif t not in produced:
+                spec = g.tensors[t]
+                if spec.producer is None:
+                    problems.append(
+                        f"{n.name} reads {t!r} which is neither an input, a "
+                        f"param, nor produced by any node")
+                else:
+                    problems.append(
+                        f"graph not topologically ordered: {n.name} reads "
+                        f"{t!r} before its producer {spec.producer!r} runs")
+        for t in n.outputs:
+            if t not in g.tensors:
+                problems.append(f"{n.name} writes unregistered tensor {t!r}")
+            elif g.tensors[t].producer != n.name:
+                problems.append(
+                    f"tensor {t!r} names producer {g.tensors[t].producer!r} "
+                    f"but is written by {n.name}")
+            produced.add(t)
+        if n.op_type not in OP_VOCABULARY:
+            problems.append(f"{n.name} has op_type {n.op_type!r} outside the "
+                            f"Table-3 vocabulary")
+    for t in g.outputs:
+        if t not in g.tensors:
+            problems.append(f"graph output {t!r} is a dangling tensor")
+        elif t not in produced:
+            problems.append(f"graph output {t!r} is never produced")
+
+    # -- tensor spec sanity: shapes and layouts ------------------------------
+    for t, spec in g.tensors.items():
+        if any((not isinstance(s, int)) or s <= 0 for s in spec.shape):
+            problems.append(f"tensor {t!r} has non-positive shape {spec.shape}")
+        if spec.rank == 4 and spec.layout and spec.layout not in LAYOUTS:
+            problems.append(f"tensor {t!r} has unknown layout {spec.layout!r}")
+        if spec.producer is not None and spec.producer not in node_names:
+            problems.append(
+                f"tensor {t!r} claims producer {spec.producer!r} which is "
+                f"not a node in the graph")
+
+    # -- link-group well-formedness -----------------------------------------
+    groups = linking.link_groups(g)
+    for gid, members in groups.items():
+        if len(members) < 2:
+            problems.append(
+                f"link_group {gid} has a single member "
+                f"({members[0].name}); linking is defined on op *chains*")
+            continue
+        member_names = {m.name for m in members}
+        # connected: the members must form one producer/consumer-connected
+        # region (chains and shortcut joins both qualify; unrelated ops
+        # sharing a gid do not).
+        frontier = [members[0].name]
+        reached = {members[0].name}
+        while frontier:
+            m = g.node_by_name(frontier.pop())
+            neighbours = {p.name for p in g.predecessors(m)}
+            neighbours |= {s.name for s in g.successors(m)}
+            for nb in neighbours & member_names - reached:
+                reached.add(nb)
+                frontier.append(nb)
+        if reached != member_names:
+            problems.append(
+                f"link_group {gid} is not a connected region: "
+                f"{sorted(member_names - reached)} detached from "
+                f"{sorted(reached)}")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# Pass + registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PassContext:
+    """Per-run state handed to every pass."""
+
+    device: DeviceSpec
+    options: dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: pass-populated artifacts (e.g. the chosen d-Xenos scheme); merged into
+    #: the pass's PassRecord.summary after it runs.
+    artifacts: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pass:
+    """One registered optimization stage."""
+
+    name: str
+    fn: Callable[[Graph, PassContext], Graph]
+    description: str
+    #: invariants the pass declares beyond verify_graph's structural checks;
+    #: each is a named predicate Graph -> bool, checked after the pass runs.
+    invariants: tuple[tuple[str, Callable[[Graph], bool]], ...] = ()
+    #: extracts a human-facing summary dict from (before, after) graphs.
+    summarize: Callable[[Graph, Graph], dict[str, Any]] | None = None
+
+
+REGISTRY: dict[str, Pass] = {}
+
+#: cumulative optimization levels (dxenos_plan is opt-in, see module docstring)
+LEVELS: dict[int, tuple[str, ...]] = {
+    0: (),
+    1: ("fuse_cbr",),
+    2: ("fuse_cbr", "link_operators"),
+    3: ("fuse_cbr", "link_operators", "dos_split"),
+}
+DEFAULT_LEVEL = 3
+
+
+def register_pass(p: Pass) -> Pass:
+    if p.name in REGISTRY:
+        raise PipelineError(f"pass {p.name!r} is already registered")
+    REGISTRY[p.name] = p
+    return p
+
+
+def unregister_pass(name: str) -> None:
+    REGISTRY.pop(name, None)
+
+
+def graph_pass(name: str, description: str, *,
+               invariants: Iterable[tuple[str, Callable[[Graph], bool]]] = (),
+               summarize: Callable[[Graph, Graph], dict[str, Any]] | None = None):
+    """Decorator form of :func:`register_pass` for drop-in stages."""
+
+    def wrap(fn: Callable[[Graph, PassContext], Graph]):
+        register_pass(Pass(name, fn, description, tuple(invariants), summarize))
+        return fn
+
+    return wrap
+
+
+def resolve_passes(level: int | None = None,
+                   passes: Sequence[str] | None = None) -> list[Pass]:
+    """Pass list for an explicit ``passes`` selection or a numbered level."""
+    if passes is not None:
+        names = list(passes)
+    else:
+        lvl = DEFAULT_LEVEL if level is None else level
+        if lvl not in LEVELS:
+            raise PipelineError(f"unknown level {lvl!r}; have {sorted(LEVELS)}")
+        names = list(LEVELS[lvl])
+    out = []
+    for name in names:
+        if name not in REGISTRY:
+            raise PipelineError(
+                f"unknown pass {name!r}; registered: {sorted(REGISTRY)}")
+        out.append(REGISTRY[name])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reports
+# ---------------------------------------------------------------------------
+
+def _edge_count(g: Graph) -> int:
+    return sum(len(n.inputs) for n in g.nodes)
+
+
+@dataclasses.dataclass
+class PassRecord:
+    """What one pass did to the graph."""
+
+    name: str
+    wall_s: float
+    nodes_before: int
+    nodes_after: int
+    edges_before: int
+    edges_after: int
+    verified: bool
+    summary: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def node_delta(self) -> int:
+        return self.nodes_after - self.nodes_before
+
+    def as_dict(self) -> dict[str, Any]:
+        return {**dataclasses.asdict(self), "node_delta": self.node_delta}
+
+
+@dataclasses.dataclass
+class PassReport:
+    """Structured result of one :func:`optimize` run."""
+
+    graph_name: str
+    device: str
+    passes: list[PassRecord] = dataclasses.field(default_factory=list)
+    total_s: float = 0.0
+    #: modeled single-unit serial roofline time (costmodel) before the first
+    #: pass and after the last, with linking credited — the quantitative
+    #: content of Fig. 7's HO/VO reductions.
+    modeled_before_s: float = 0.0
+    modeled_after_s: float = 0.0
+
+    @property
+    def modeled_saving(self) -> float:
+        """Fraction of modeled serial time removed by the pipeline."""
+        if self.modeled_before_s <= 0:
+            return 0.0
+        return 1.0 - self.modeled_after_s / self.modeled_before_s
+
+    def record(self, rec: PassRecord) -> None:
+        self.passes.append(rec)
+        self.total_s += rec.wall_s
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "graph": self.graph_name, "device": self.device,
+            "total_s": self.total_s,
+            "modeled_before_s": self.modeled_before_s,
+            "modeled_after_s": self.modeled_after_s,
+            "modeled_saving": self.modeled_saving,
+            "passes": [p.as_dict() for p in self.passes],
+        }
+
+    def format(self) -> str:
+        """Human-readable table (what the examples and Table-2 bench print)."""
+        lines = [f"PassReport[{self.graph_name} @ {self.device}] "
+                 f"total {self.total_s * 1e3:.2f} ms, modeled saving "
+                 f"{100 * self.modeled_saving:.1f}%"]
+        for p in self.passes:
+            extras = "".join(f" {k}={v}" for k, v in p.summary.items())
+            lines.append(
+                f"  {p.name:16s} {p.wall_s * 1e3:7.2f} ms  "
+                f"nodes {p.nodes_before:3d} -> {p.nodes_after:3d}  "
+                f"edges {p.edges_before:3d} -> {p.edges_after:3d}"
+                f"{extras}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Timing helper (shared with the serving engine's stage instrumentation)
+# ---------------------------------------------------------------------------
+
+class _Stage:
+    """One timed enter/exit of a named stage (see StageTimer)."""
+
+    __slots__ = ("_timer", "_name", "_t0")
+
+    def __init__(self, timer: "StageTimer", name: str):
+        self._timer = timer
+        self._name = name
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.perf_counter() - self._t0
+        t = self._timer
+        t.totals[self._name] = t.totals.get(self._name, 0.0) + dt
+        t.counts[self._name] = t.counts.get(self._name, 0) + 1
+        return False
+
+
+class StageTimer:
+    """Tiny context-manager timer: accumulates wall time per named stage."""
+
+    def __init__(self) -> None:
+        self.totals: dict[str, float] = {}
+        self.counts: dict[str, int] = {}
+
+    def stage(self, name: str) -> _Stage:
+        return _Stage(self, name)
+
+    def as_dict(self) -> dict[str, dict[str, float]]:
+        return {k: {"total_s": v, "calls": self.counts[k],
+                    "mean_s": v / self.counts[k]}
+                for k, v in self.totals.items()}
+
+
+# ---------------------------------------------------------------------------
+# The entry point
+# ---------------------------------------------------------------------------
+
+def _modeled_serial_s(g: Graph, device: DeviceSpec, linked: bool) -> float:
+    flops = sum(cm.op_flops(n, g.tensors) for n in g.nodes)
+    byts = sum(cm.op_bytes(n, g.tensors, linked=linked) for n in g.nodes)
+    return cm.roofline(flops, byts, 0.0, chips=1).serial_s
+
+
+def optimize(g: Graph, device: DeviceSpec | None = None, *,
+             level: int | None = None, passes: Sequence[str] | None = None,
+             options: dict[str, Any] | None = None,
+             verify: bool = True) -> tuple[Graph, PassReport]:
+    """Run the optimization pipeline; returns ``(optimized_graph, report)``.
+
+    ``level`` selects a cumulative pass prefix (default ``O3`` = fuse + link
+    + DOS split); ``passes`` overrides with an explicit ordered list of
+    registered pass names.  ``options`` is pass-visible configuration (e.g.
+    ``n_devices``/``sync`` for ``dxenos_plan``).  With ``verify=True`` every
+    pass's output graph is checked by :func:`verify_graph` plus the pass's
+    own declared invariants, raising :class:`PassVerificationError` on the
+    first corrupted rewrite.
+    """
+    device = device or DeviceSpec()
+    ctx = PassContext(device=device, options=dict(options or {}))
+    plist = resolve_passes(level, passes)
+    report = PassReport(graph_name=g.name, device=device.name)
+
+    if verify:
+        pre = verify_graph(g)
+        if pre:
+            raise PassVerificationError("<input>", pre)
+    report.modeled_before_s = _modeled_serial_s(g, device, linked=False)
+
+    out = g
+    for p in plist:
+        before = out
+        ctx.artifacts = {}
+        t0 = time.perf_counter()
+        out = p.fn(before, ctx)
+        wall = time.perf_counter() - t0
+        verified = False
+        if verify:
+            problems = verify_graph(out)
+            for inv_name, pred in p.invariants:
+                if not pred(out):
+                    problems.append(f"declared invariant violated: {inv_name}")
+            if problems:
+                raise PassVerificationError(p.name, problems)
+            verified = True
+        summary = dict(p.summarize(before, out)) if p.summarize else {}
+        summary.update(ctx.artifacts)
+        report.record(PassRecord(
+            name=p.name, wall_s=wall,
+            nodes_before=before.num_ops(), nodes_after=out.num_ops(),
+            edges_before=_edge_count(before), edges_after=_edge_count(out),
+            verified=verified, summary=summary))
+    report.modeled_after_s = _modeled_serial_s(out, device, linked=True)
+    return out, report
+
+
+# ---------------------------------------------------------------------------
+# Built-in passes (the paper's stages, registered)
+# ---------------------------------------------------------------------------
+
+def _summarize_fuse(before: Graph, after: Graph) -> dict[str, Any]:
+    fused = [n for n in after.nodes if n.op_type == "cbr"]
+    return {"cbr_fused": len(fused)}
+
+
+def _no_fusable_chain_left(g: Graph) -> bool:
+    """After fusion the §3 pattern finder must come up empty (fixpoint)."""
+    from . import patterns
+    return not patterns.find_cbr_fusions(g)
+
+
+register_pass(Pass(
+    name="fuse_cbr",
+    fn=lambda g, ctx: linking.fuse_cbr(g),
+    description="Preprocessing fusion: Conv+Bn(+Bias)+Relu -> CBR (paper §3)",
+    invariants=(("no_fusable_chain_left", _no_fusable_chain_left),),
+    summarize=_summarize_fuse,
+))
+
+
+def _summarize_link(before: Graph, after: Graph) -> dict[str, Any]:
+    groups = linking.link_groups(after)
+    linked_ops = [n for n in after.nodes if n.op_type in ("cbra", "cbrm")]
+    return {"link_groups": len(groups), "linked_ops": len(linked_ops)}
+
+
+register_pass(Pass(
+    name="link_operators",
+    fn=lambda g, ctx: linking.link(g),
+    description="Vertical optimization: Table-1 operator linking (paper §4.1)",
+    summarize=_summarize_link,
+))
+
+
+def _summarize_dos(before: Graph, after: Graph) -> dict[str, Any]:
+    plans = dos.plans(after)
+    split = [p for p in plans.values() if p.param_chunks]
+    worst = max((p.imbalance for p in plans.values()), default=0.0)
+    return {"split_plans": len(plans), "param_splits": len(split),
+            "max_imbalance": round(worst, 4)}
+
+
+def _all_compute_planned(g: Graph) -> bool:
+    return all("split_plan" in n.dataflow for n in g.nodes
+               if n.op_type in dos.COMPUTE_OPS)
+
+
+register_pass(Pass(
+    name="dos_split",
+    fn=lambda g, ctx: dos.optimize(g, ctx.device),
+    description="Horizontal optimization: DSP-aware operator split (paper §4.2)",
+    invariants=(("every_compute_op_has_split_plan", _all_compute_planned),),
+    summarize=_summarize_dos,
+))
+
+
+def _dxenos_fn(g: Graph, ctx: PassContext) -> Graph:
+    """d-Xenos planning (§5): Algorithm 1 over the Figure-6 scheme set.
+
+    Annotates every compute op with its best per-op scheme (the paper's
+    winning "Ring-Mix") and records the best whole-graph scheme in the
+    report.  ``options``: ``n_devices`` (default 4), ``sync`` (ring|ps),
+    ``annotate`` (default True; False skips the per-op Ring-Mix search
+    when only the whole-graph scheme is wanted — it costs one Algorithm-1
+    run per compute op).
+    """
+    from . import planner  # local: planner imports linking
+
+    n_devices = int(ctx.options.get("n_devices", 4))
+    sync = ctx.options.get("sync", "ring")
+    best, best_t, _ = planner.plan_distributed(g, n_devices, sync, ctx.device)
+    out = g
+    if ctx.options.get("annotate", True):
+        mix = planner.plan_mix(g, n_devices, sync, ctx.device)
+        out = g.clone()
+        for node in out.nodes:
+            if node.name in mix:
+                node.dataflow["partition_scheme"] = str(mix[node.name])
+    ctx.artifacts.update({
+        "n_devices": n_devices, "sync": sync,
+        "best_scheme": str(best), "best_modeled_s": best_t,
+    })
+    return out
+
+
+register_pass(Pass(
+    name="dxenos_plan",
+    fn=_dxenos_fn,
+    description="d-Xenos partition-scheme planning, Algorithm 1 (paper §5)",
+))
+
+
+#: engine mode -> pass list (the Fig.-7 ablation axes; ``ho`` is DOS without
+#: the vertical rewrites, which is why it is not a numbered level)
+MODE_PASSES: dict[str, tuple[str, ...]] = {
+    "vanilla": (),
+    "ho": ("dos_split",),
+    "xenos": ("fuse_cbr", "link_operators", "dos_split"),
+}
+
+
+def optimize_for_mode(g: Graph, mode: str,
+                      device: DeviceSpec | None = None,
+                      verify: bool = True) -> tuple[Graph, PassReport]:
+    """Pipeline entry keyed by engine execution mode (vanilla/ho/xenos)."""
+    if mode not in MODE_PASSES:
+        raise PipelineError(f"unknown engine mode {mode!r}; "
+                            f"have {sorted(MODE_PASSES)}")
+    return optimize(g, device, passes=MODE_PASSES[mode], verify=verify)

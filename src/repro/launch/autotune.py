@@ -15,7 +15,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
+from repro.core.pipeline import PassRecord, PassReport
 from repro.core.planner import algorithm1
 from repro.launch import dryrun
 
@@ -42,11 +44,21 @@ def score(arch: str, shape: str, mesh_name: str, rules: dict) -> dict:
 
 def tune(arch: str, shape: str, mesh_name: str = "single",
          rulesets: dict[str, dict] | None = None,
-         objective: str = "bound_s") -> tuple[str, dict[str, dict]]:
+         objective: str = "bound_s",
+         ) -> tuple[str, dict[str, dict], PassReport]:
+    """Algorithm-1 search over rulesets, instrumented as a PassReport.
+
+    Each candidate scores as one pass record (wall time + objective), so the
+    tuner's output is the same structured artifact ``pipeline.optimize``
+    produces for the graph passes.  Returns ``(best_name, per-candidate
+    results, report)``.
+    """
     rulesets = rulesets or CANDIDATE_RULESETS
     results: dict[str, dict] = {}
+    report = PassReport(graph_name=f"{arch}/{shape}", device=mesh_name)
 
     def profiling(name: str) -> float:
+        t0 = time.perf_counter()
         try:
             rec = score(arch, shape, mesh_name, rulesets[name])
         except Exception as e:  # noqa: BLE001 - invalid scheme = +inf
@@ -54,13 +66,21 @@ def tune(arch: str, shape: str, mesh_name: str = "single",
                    "bound_s": float("inf")}
         results[name] = rec
         val = rec.get(objective, float("inf"))
-        print(f"  {name:18s} -> {objective}={val:.6f}"
-              + (f" dominant={rec.get('dominant')}" if "dominant" in rec else ""))
+        summary = {objective: round(val, 6)}
+        if "dominant" in rec:
+            summary["dominant"] = rec["dominant"]
+        if "error" in rec:
+            summary["error"] = rec["error"]
+        report.record(PassRecord(
+            name=f"plan:{name}", wall_s=time.perf_counter() - t0,
+            nodes_before=0, nodes_after=0, edges_before=0, edges_after=0,
+            verified=False, summary=summary))
         return val
 
     best, best_t = algorithm1(list(rulesets), profiling)
+    print(report.format())
     print(f"best scheme: {best} ({objective}={best_t:.6f})")
-    return best, results
+    return best, results, report
 
 
 def main(argv=None):
@@ -71,13 +91,14 @@ def main(argv=None):
     ap.add_argument("--objective", default="bound_s")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
-    best, results = tune(args.arch, args.shape, args.mesh,
-                         objective=args.objective)
+    best, results, report = tune(args.arch, args.shape, args.mesh,
+                                 objective=args.objective)
     if args.out:
         with open(args.out, "a") as f:
             f.write(json.dumps({"arch": args.arch, "shape": args.shape,
                                 "mesh": args.mesh, "best": best,
-                                "results": results}) + "\n")
+                                "results": results,
+                                "report": report.as_dict()}) + "\n")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import INPUT_SHAPES, all_configs, get_config
 from repro.core import costmodel as cm
+from repro.core.pipeline import StageTimer
 from repro.distributed import sharding as SH
 from repro.distributed import state_sharding as SS
 from repro.launch import mesh as mesh_lib
@@ -254,11 +255,15 @@ def run_one(arch: str, shape_name: str, mesh_name: str, out=None,
             print(f"SKIP {arch} x {shape_name}: {rec['skipped']}")
         return rec
     t0 = time.time()
-    mesh = build_mesh(multi_pod=(mesh_name == "multi"))
-    lowered, compiled, model, _ = lower_one(arch, shape_name, mesh, rules)
-    rec = analyze(arch, shape_name, mesh_name, lowered, compiled, model)
+    timer = StageTimer()  # same stage instrumentation the pass manager uses
+    with timer.stage("lower_compile"):
+        mesh = build_mesh(multi_pod=(mesh_name == "multi"))
+        lowered, compiled, model, _ = lower_one(arch, shape_name, mesh, rules)
+    with timer.stage("analyze"):
+        rec = analyze(arch, shape_name, mesh_name, lowered, compiled, model)
     if calibrate and mesh_name == "single":  # roofline table is single-pod
-        cal = calibrate_depth(arch, shape_name, mesh, rules)
+        with timer.stage("calibrate_depth"):
+            cal = calibrate_depth(arch, shape_name, mesh, rules)
         terms = cm.roofline(cal["flops"], cal["bytes"],
                             cal["collective_bytes"], chips=1)
         rec["calibrated"] = {
@@ -268,6 +273,7 @@ def run_one(arch: str, shape_name: str, mesh_name: str, out=None,
             "useful_flops_ratio": (rec["model_flops_per_device"] / cal["flops"])
                                   if cal["flops"] else 0.0,
         }
+    rec["stages"] = timer.as_dict()
     rec["compile_s"] = round(time.time() - t0, 1)
     if verbose:
         print(f"OK {arch:24s} {shape_name:12s} {mesh_name:6s} "

@@ -8,6 +8,11 @@ the continuous-batching loop production servers run.
 
 The KV caches are the engine's state; per-slot admission writes a freshly
 prefilled cache into the batch dimension of the stacked caches.
+
+The engine shares the optimization pipeline's stage instrumentation
+(``repro.core.pipeline.StageTimer``): every prefill and batched decode step
+is timed, and ``stats()`` returns the same structured per-stage record the
+pass manager emits, so serving traces and PassReports read alike.
 """
 from __future__ import annotations
 
@@ -18,6 +23,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.pipeline import StageTimer
 
 
 @dataclasses.dataclass
@@ -40,6 +47,9 @@ class ServingEngine:
         self.greedy = greedy
         self.queue: deque[Request] = deque()
         self.active: list[Request | None] = [None] * slots
+        self.timer = StageTimer()
+        self.tokens_out = 0        # every generated token (prefill + decode)
+        self._decode_tokens = 0    # decode-loop tokens only (throughput)
         self.caches = model.init_caches(slots, max_len)
         self._last_tokens = jnp.zeros((slots, 1), jnp.int32)
         self._serve = jax.jit(lambda p, c, t: model.serve_step(p, c, t))
@@ -55,10 +65,13 @@ class ServingEngine:
             if self.active[slot] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            logits, fresh = self._prefill(
-                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
+            with self.timer.stage("prefill"):
+                logits, fresh = self._prefill(
+                    self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
+                jax.block_until_ready(logits)
             tok = self._pick(logits)[0]
             req.generated.append(int(tok))
+            self.tokens_out += 1  # first token comes out of the prefill
             # splice the prefilled slot-0 cache into this slot
             self.caches = jax.tree.map(
                 lambda full, one: full.at[:, slot].set(one[:, 0])
@@ -76,13 +89,17 @@ class ServingEngine:
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
             return 0
-        logits, self.caches = self._serve(self.params, self.caches,
-                                          self._last_tokens)
-        toks = self._pick(logits)
+        with self.timer.stage("decode"):
+            logits, self.caches = self._serve(self.params, self.caches,
+                                              self._last_tokens)
+            toks = self._pick(logits)
+            jax.block_until_ready(toks)
         for slot in live:
             req = self.active[slot]
             t = int(toks[slot])
             req.generated.append(t)
+            self.tokens_out += 1
+            self._decode_tokens += 1
             self._last_tokens = self._last_tokens.at[slot, 0].set(t)
             if t == self.eos_id or len(req.generated) >= req.max_new_tokens:
                 req.done = True
@@ -95,3 +112,11 @@ class ServingEngine:
                 and steps < max_steps:
             self.step()
             steps += 1
+
+    def stats(self) -> dict:
+        """Per-stage timing + throughput, pipeline-report style."""
+        out = {"stages": self.timer.as_dict(), "tokens_out": self.tokens_out}
+        decode = out["stages"].get("decode")
+        if decode and decode["total_s"] > 0:
+            out["decode_tokens_per_s"] = self._decode_tokens / decode["total_s"]
+        return out

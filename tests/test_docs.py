@@ -1,0 +1,17 @@
+"""Documentation integrity: the docs exist and every path they cite does."""
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def test_docs_exist():
+    for rel in ("README.md", "docs/architecture.md", "docs/kernels.md"):
+        assert (REPO / rel).exists(), f"missing doc: {rel}"
+
+
+def test_docs_reference_only_existing_paths():
+    import sys
+    sys.path.insert(0, str(REPO / "tools"))
+    import check_docs
+    problems = check_docs.check()
+    assert not problems, "\n".join(problems)

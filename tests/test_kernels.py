@@ -4,6 +4,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.decode_attention import ops as da_ops, ref as da_ref

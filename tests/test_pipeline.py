@@ -1,0 +1,248 @@
+"""Pass manager: registration/ordering, optimize() equivalence with the
+hand-wired stage calls, graph verification, and PassReport contents."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import cnn_zoo
+from repro.core import (DeviceSpec, build_engine, execute, init_params,
+                        optimize)
+from repro.core import dos, linking, pipeline
+from repro.core.graph import Graph
+from repro.core import graph as G
+
+
+# -- registration & ordering --------------------------------------------------
+
+def test_builtin_passes_registered():
+    for name in ("fuse_cbr", "link_operators", "dos_split", "dxenos_plan"):
+        assert name in pipeline.REGISTRY
+        p = pipeline.REGISTRY[name]
+        assert p.description
+
+
+def test_levels_are_cumulative_prefixes():
+    for lvl in range(1, max(pipeline.LEVELS) + 1):
+        prev = pipeline.LEVELS[lvl - 1]
+        assert pipeline.LEVELS[lvl][:len(prev)] == prev
+
+
+def test_resolve_passes_orders_and_rejects_unknown():
+    names = [p.name for p in pipeline.resolve_passes(level=3)]
+    assert names == ["fuse_cbr", "link_operators", "dos_split"]
+    names = [p.name for p in pipeline.resolve_passes(
+        passes=("dos_split", "fuse_cbr"))]
+    assert names == ["dos_split", "fuse_cbr"]  # explicit order is respected
+    with pytest.raises(pipeline.PipelineError):
+        pipeline.resolve_passes(passes=("no_such_pass",))
+    with pytest.raises(pipeline.PipelineError):
+        pipeline.resolve_passes(level=99)
+
+
+def test_custom_pass_registration_roundtrip():
+    @pipeline.graph_pass("tmp_noop", "test-only no-op pass")
+    def _noop(g, ctx):
+        return g.clone()
+
+    try:
+        opt, report = pipeline.optimize(cnn_zoo.build("mobilenet"),
+                                        passes=("tmp_noop",))
+        assert report.passes[0].name == "tmp_noop"
+        assert report.passes[0].node_delta == 0
+        with pytest.raises(pipeline.PipelineError):
+            pipeline.register_pass(pipeline.REGISTRY["tmp_noop"])  # duplicate
+    finally:
+        pipeline.unregister_pass("tmp_noop")
+    assert "tmp_noop" not in pipeline.REGISTRY
+
+
+# -- equivalence with the hand-wired stage calls ------------------------------
+
+@pytest.mark.parametrize("name", ["mobilenet", "squeezenet", "bert_s"])
+def test_pipeline_matches_handwired_stages(name):
+    g = cnn_zoo.build(name)
+    dev = DeviceSpec.tms320c6678()
+    hand = dos.optimize(linking.link(linking.fuse_cbr(g)), dev)
+    piped, report = pipeline.optimize(g, dev)
+
+    # identical structural rewrite...
+    assert [n.op_type for n in piped.nodes] == [n.op_type for n in hand.nodes]
+    assert [n.name for n in piped.nodes] == [n.name for n in hand.nodes]
+    for a, b in zip(piped.nodes, hand.nodes):
+        assert a.dataflow.get("link_group") == b.dataflow.get("link_group")
+        assert a.dataflow.get("split_plan") == b.dataflow.get("split_plan")
+
+    # ...and numerically equivalent execution vs the unoptimized graph
+    params = init_params(g)
+    rng = np.random.default_rng(0)
+    inputs = {i: rng.normal(size=g.tensors[i].shape).astype("float32")
+              for i in g.inputs}
+    ref = execute(g, params, inputs, mode="vanilla")
+    out = execute(piped, params, inputs, mode="xenos")
+    for a, b in zip(ref, out):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-5)
+
+
+def test_core_optimize_routes_through_pipeline():
+    """The back-compat repro.core.optimize wrapper = the pipeline output."""
+    g = cnn_zoo.build("shufflenet")
+    a = optimize(g)
+    b, _ = pipeline.optimize(g)
+    assert [n.op_type for n in a.nodes] == [n.op_type for n in b.nodes]
+
+
+def test_build_engine_modes_agree():
+    g = cnn_zoo.build("squeezenet")
+    params = init_params(g)
+    rng = np.random.default_rng(1)
+    inputs = [rng.normal(size=g.tensors[i].shape).astype("float32")
+              for i in g.inputs]
+    outs = {}
+    for mode in ("vanilla", "ho", "xenos"):
+        eng, report = build_engine(g, mode)
+        assert [p.name for p in report.passes] == list(pipeline.MODE_PASSES[mode])
+        outs[mode] = eng(params, *inputs)
+    for mode in ("ho", "xenos"):
+        for a, b in zip(outs["vanilla"], outs[mode]):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=3e-4, atol=3e-5)
+
+
+# -- verification -------------------------------------------------------------
+
+def _tiny_graph() -> Graph:
+    g = Graph("tiny")
+    x = g.add_input("x", (1, 8, 8, 4))
+    y = G.conv2d(g, x, 8, 3)
+    y = G.bn(g, y)
+    y = G.relu(g, y)
+    y = G.pool(g, y, "avg", 2)
+    g.mark_output(y)
+    return g
+
+
+def test_verify_graph_accepts_valid_and_optimized():
+    g = _tiny_graph()
+    assert pipeline.verify_graph(g) == []
+    opt, _ = pipeline.optimize(g)
+    assert pipeline.verify_graph(opt) == []
+
+
+def test_verifier_catches_dangling_edge():
+    g = _tiny_graph()
+    g.nodes[1].inputs[0] = "ghost_tensor"
+    problems = pipeline.verify_graph(g)
+    assert any("dangling" in p for p in problems)
+
+
+def test_verifier_catches_wrong_producer():
+    g = _tiny_graph()
+    g.tensors[g.nodes[0].outputs[0]].producer = "someone_else"
+    assert pipeline.verify_graph(g)
+
+
+def test_verifier_catches_disconnected_link_group():
+    g = _tiny_graph()
+    g.nodes[0].dataflow["link_group"] = 7
+    g.nodes[-1].dataflow["link_group"] = 7  # conv and pool are not adjacent
+    problems = pipeline.verify_graph(g)
+    assert any("link_group 7" in p for p in problems)
+    g2 = _tiny_graph()
+    g2.nodes[0].dataflow["link_group"] = 3  # singleton group
+    assert any("link_group 3" in p for p in pipeline.verify_graph(g2))
+
+
+def test_corrupting_pass_raises_at_that_pass():
+    """A rewrite that leaves a dangling producer must fail in place."""
+
+    def corrupt(g, ctx):
+        out = g.clone()
+        out.nodes.pop(0)  # drop the conv but keep its output tensor around
+        return out
+
+    pipeline.register_pass(pipeline.Pass(
+        "tmp_corrupt", corrupt, "test-only corrupted rewrite"))
+    try:
+        with pytest.raises(pipeline.PassVerificationError) as ei:
+            pipeline.optimize(_tiny_graph(), passes=("tmp_corrupt",))
+        assert ei.value.pass_name == "tmp_corrupt"
+        assert ei.value.problems
+    finally:
+        pipeline.unregister_pass("tmp_corrupt")
+
+
+def test_declared_invariant_violation_raises():
+    pipeline.register_pass(pipeline.Pass(
+        "tmp_lying", lambda g, ctx: g.clone(), "claims an impossible invariant",
+        invariants=(("never_true", lambda g: False),)))
+    try:
+        with pytest.raises(pipeline.PassVerificationError) as ei:
+            pipeline.optimize(_tiny_graph(), passes=("tmp_lying",))
+        assert any("never_true" in p for p in ei.value.problems)
+    finally:
+        pipeline.unregister_pass("tmp_lying")
+
+
+# -- PassReport ---------------------------------------------------------------
+
+def test_pass_report_fields_populated():
+    g = cnn_zoo.build("mobilenet")
+    opt, report = pipeline.optimize(g, DeviceSpec.tms320c6678())
+    assert report.graph_name == "mobilenet"
+    assert report.device == "tms320c6678"
+    assert [p.name for p in report.passes] == [
+        "fuse_cbr", "link_operators", "dos_split"]
+    for rec in report.passes:
+        assert rec.wall_s >= 0.0
+        assert rec.verified
+        assert rec.nodes_before >= rec.nodes_after > 0
+    assert report.total_s == pytest.approx(
+        sum(p.wall_s for p in report.passes))
+    # per-pass node deltas: fusion shrinks the graph, annotation passes don't
+    assert report.passes[0].node_delta < 0
+    assert report.passes[0].summary["cbr_fused"] > 0
+    assert "link_groups" in report.passes[1].summary
+    assert report.passes[2].summary["split_plans"] > 0
+    # modeled cost saving: linking must not make the modeled time worse
+    assert report.modeled_before_s > 0
+    assert report.modeled_after_s <= report.modeled_before_s
+    assert 0.0 <= report.modeled_saving <= 1.0
+    # serializable + printable
+    d = report.as_dict()
+    assert d["passes"][0]["name"] == "fuse_cbr"
+    assert "fuse_cbr" in report.format()
+
+
+def test_dxenos_plan_pass_annotates_schemes():
+    g = cnn_zoo.build("mobilenet")
+    opt, report = pipeline.optimize(
+        g, passes=("fuse_cbr", "link_operators", "dxenos_plan"),
+        options={"n_devices": 4})
+    rec = report.passes[-1]
+    assert rec.summary["n_devices"] == 4
+    assert rec.summary["best_scheme"]
+    assert rec.summary["best_modeled_s"] > 0
+    planned = [n for n in opt.nodes if "partition_scheme" in n.dataflow]
+    assert planned, "compute ops must carry their per-op best scheme"
+
+
+def test_optimize_for_mode_matches_mode_passes():
+    g = _tiny_graph()
+    for mode, names in pipeline.MODE_PASSES.items():
+        _, report = pipeline.optimize_for_mode(g, mode)
+        assert tuple(p.name for p in report.passes) == names
+    with pytest.raises(pipeline.PipelineError):
+        pipeline.optimize_for_mode(g, "warp_speed")
+
+
+def test_stage_timer():
+    t = pipeline.StageTimer()
+    with t.stage("a"):
+        pass
+    with t.stage("a"):
+        pass
+    d = t.as_dict()
+    assert d["a"]["calls"] == 2
+    assert d["a"]["total_s"] >= 0

@@ -2,6 +2,9 @@
 import math
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import cnn_zoo
