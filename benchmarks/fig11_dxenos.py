@@ -27,8 +27,9 @@ import time
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.distributed import ring_allreduce, ps_sync
+from repro.distributed.compat import make_mesh, shard_map
 
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("x",))
 n = 1 << 20
 x = jnp.ones((8, n), jnp.float32)
 
@@ -42,8 +43,8 @@ def make(kind):
         return jax.lax.psum(v, "x")
     # check_vma=False: the replication of the hand-built ring/PS schedules
     # cannot be statically inferred from ppermute
-    return jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=P("x", None),
-                                 out_specs=P(), check_vma=False))
+    return jax.jit(shard_map(inner, mesh=mesh, in_specs=P("x", None),
+                             out_specs=P(), check_vma=False))
 
 import numpy as np
 want = np.asarray(make("psum")(x))

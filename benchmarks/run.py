@@ -12,7 +12,8 @@ import time
 import traceback
 
 from benchmarks import (fig7_inference_time, fig8_framework, fig11_dxenos,
-                        roofline, table2_auto_time, table4_operators)
+                        roofline, serving_throughput, table2_auto_time,
+                        table4_operators)
 
 SUITES = {
     "fig7": fig7_inference_time.run,
@@ -21,6 +22,7 @@ SUITES = {
     "table4": table4_operators.run,
     "fig11": fig11_dxenos.run,
     "roofline": roofline.run,
+    "serving": serving_throughput.run,
 }
 
 

@@ -43,6 +43,7 @@ def main(argv=None):
     print(f"{done}/{len(reqs)} done, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s, {args.slots} slots)")
     stats = engine.stats()
+    print(f"scheduler plan: {stats['plan']}")
     for stage, s in stats["stages"].items():
         print(f"  stage {stage}: {s['calls']} calls, "
               f"mean {s['mean_s'] * 1e3:.2f} ms")

@@ -92,6 +92,14 @@ class ModelConfig:
         return self.encoder_layers > 0
 
     @property
+    def attention_only(self) -> bool:
+        """Every decoder layer mixes tokens through attention alone — the
+        precondition for padded-batch and chunked prefill (a recurrent scan
+        cannot stop at a per-row length; an encoder needs its own pass)."""
+        return (not self.attn_free and self.family not in ("ssm", "hybrid")
+                and not self.is_encoder_decoder)
+
+    @property
     def sub_quadratic(self) -> bool:
         """Can this config decode with O(1)/O(window) memory per token?"""
         return self.family in ("ssm",) or self.sliding_window > 0 \

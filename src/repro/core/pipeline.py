@@ -43,6 +43,7 @@ drop-in: define a function ``Graph -> Graph`` and register it with
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Any, Callable, Iterable, Sequence
 
@@ -291,6 +292,10 @@ class PassReport:
     #: content of Fig. 7's HO/VO reductions.
     modeled_before_s: float = 0.0
     modeled_after_s: float = 0.0
+    #: True when this report came out of the pass-result cache: the pipeline
+    #: did not run again for this (graph, passes, options, device) key and
+    #: the per-pass records describe the original (cached) run.
+    cache_hit: bool = False
 
     @property
     def modeled_saving(self) -> float:
@@ -310,6 +315,7 @@ class PassReport:
             "modeled_before_s": self.modeled_before_s,
             "modeled_after_s": self.modeled_after_s,
             "modeled_saving": self.modeled_saving,
+            "cache_hit": self.cache_hit,
             "passes": [p.as_dict() for p in self.passes],
         }
 
@@ -317,7 +323,8 @@ class PassReport:
         """Human-readable table (what the examples and Table-2 bench print)."""
         lines = [f"PassReport[{self.graph_name} @ {self.device}] "
                  f"total {self.total_s * 1e3:.2f} ms, modeled saving "
-                 f"{100 * self.modeled_saving:.1f}%"]
+                 f"{100 * self.modeled_saving:.1f}%"
+                 f"{' (cache hit)' if self.cache_hit else ''}"]
         for p in self.passes:
             extras = "".join(f" {k}={v}" for k, v in p.summary.items())
             lines.append(
@@ -370,6 +377,47 @@ class StageTimer:
 
 
 # ---------------------------------------------------------------------------
+# Pass-result caching
+# ---------------------------------------------------------------------------
+
+def graph_fingerprint(g: Graph) -> str:
+    """Stable content hash of a graph: structure, shapes, attrs and the
+    dataflow metadata passes rewrite.  Two graphs with the same fingerprint
+    produce the same pipeline output for the same pass list and options."""
+    h = hashlib.sha256()
+    h.update(repr((g.name, g.inputs, g.params, g.outputs)).encode())
+    for n in g.nodes:
+        h.update(repr((n.name, n.op_type, n.inputs, n.outputs, n.params,
+                       sorted(n.attrs.items(), key=lambda kv: kv[0]),
+                       sorted(n.dataflow.items(), key=lambda kv: kv[0]),
+                       )).encode())
+    for t in sorted(g.tensors):
+        spec = g.tensors[t]
+        h.update(repr((t, spec.shape, spec.dtype, spec.layout,
+                       spec.producer)).encode())
+    return h.hexdigest()
+
+
+#: (graph_fingerprint, pass identities, options, device, verify) ->
+#: (optimized graph, report).  Bounded FIFO; see :func:`optimize`.
+_OPTIMIZE_CACHE: dict[tuple, tuple[Graph, PassReport]] = {}
+_OPTIMIZE_CACHE_MAX = 128
+
+
+def clear_optimize_cache() -> None:
+    _OPTIMIZE_CACHE.clear()
+
+
+def _cache_key(g: Graph, plist: list[Pass], options: dict[str, Any],
+               device: DeviceSpec, verify: bool) -> tuple:
+    # id(p.fn) distinguishes a re-registered pass reusing an old name
+    return (graph_fingerprint(g),
+            tuple((p.name, id(p.fn)) for p in plist),
+            repr(sorted(options.items(), key=lambda kv: kv[0])),
+            repr(device), verify)
+
+
+# ---------------------------------------------------------------------------
 # The entry point
 # ---------------------------------------------------------------------------
 
@@ -382,7 +430,7 @@ def _modeled_serial_s(g: Graph, device: DeviceSpec, linked: bool) -> float:
 def optimize(g: Graph, device: DeviceSpec | None = None, *,
              level: int | None = None, passes: Sequence[str] | None = None,
              options: dict[str, Any] | None = None,
-             verify: bool = True) -> tuple[Graph, PassReport]:
+             verify: bool = True, cache: bool = True) -> tuple[Graph, PassReport]:
     """Run the optimization pipeline; returns ``(optimized_graph, report)``.
 
     ``level`` selects a cumulative pass prefix (default ``O3`` = fuse + link
@@ -392,10 +440,26 @@ def optimize(g: Graph, device: DeviceSpec | None = None, *,
     pass's output graph is checked by :func:`verify_graph` plus the pass's
     own declared invariants, raising :class:`PassVerificationError` on the
     first corrupted rewrite.
+
+    Results are memoized on ``(graph_fingerprint, passes, options, device)``
+    (``cache=False`` opts out): a repeated call returns a clone of the cached
+    graph and a report with ``cache_hit=True`` without re-running any pass —
+    this is what lets the serving scheduler re-plan every N ticks for free.
     """
     device = device or DeviceSpec()
     ctx = PassContext(device=device, options=dict(options or {}))
     plist = resolve_passes(level, passes)
+
+    key: tuple | None = None
+    if cache:
+        key = _cache_key(g, plist, ctx.options, device, verify)
+        hit = _OPTIMIZE_CACHE.get(key)
+        if hit is not None:
+            cached_graph, cached_report = hit
+            return cached_graph.clone(), dataclasses.replace(
+                cached_report, passes=list(cached_report.passes),
+                cache_hit=True)
+
     report = PassReport(graph_name=g.name, device=device.name)
 
     if verify:
@@ -428,6 +492,13 @@ def optimize(g: Graph, device: DeviceSpec | None = None, *,
             edges_before=_edge_count(before), edges_after=_edge_count(out),
             verified=verified, summary=summary))
     report.modeled_after_s = _modeled_serial_s(out, device, linked=True)
+    if key is not None:
+        if len(_OPTIMIZE_CACHE) >= _OPTIMIZE_CACHE_MAX:
+            _OPTIMIZE_CACHE.pop(next(iter(_OPTIMIZE_CACHE)))
+        # store private copies: callers may mutate the graph or report
+        # (autotune appends PassRecords) they received
+        _OPTIMIZE_CACHE[key] = (out.clone(), dataclasses.replace(
+            report, passes=list(report.passes)))
     return out, report
 
 
@@ -524,6 +595,79 @@ register_pass(Pass(
     name="dxenos_plan",
     fn=_dxenos_fn,
     description="d-Xenos partition-scheme planning, Algorithm 1 (paper §5)",
+))
+
+
+#: chunk sizes the serving scheduler may choose between — a small closed set
+#: so the engine's jitted chunk function compiles at most len(...) variants.
+SERVE_CHUNK_SIZES: tuple[int, ...] = (8, 16, 32, 64)
+
+
+def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
+    """Serving-schedule planning: StageTimer stats -> slot/chunk plan.
+
+    The continuous-batching scheduler (repro.serving.scheduler) feeds its
+    observed per-stage timings through this pass and executes the plan it
+    gets back — the same pattern as ``dxenos_plan`` (measure, model, choose)
+    applied to request-level dataflow instead of operator-level dataflow.
+
+    ``options`` (all optional; the scheduler quantizes the floats so that
+    steady-state re-planning hits the optimize() result cache):
+
+      * ``slots``            — decode-batch width (default 4);
+      * ``max_len``          — per-slot KV budget (default 256);
+      * ``queue_depth``      — requests waiting at plan time;
+      * ``decode_step_s``    — observed mean batched-decode step time;
+      * ``prefill_token_s``  — observed mean prefill time per prompt token;
+      * ``chunk_ratio``      — target chunk cost in decode-step units
+        (default 4.0: one prefill chunk may stall decode by ~4 steps).
+
+    The plan (chunk size from ``SERVE_CHUNK_SIZES``, admission width, replan
+    period) is annotated on every node (``dataflow["serve_plan"]``) and
+    recorded in the report via ``ctx.artifacts``.
+    """
+    o = ctx.options
+    slots = int(o.get("slots", 4))
+    max_len = int(o.get("max_len", 256))
+    queue_depth = int(o.get("queue_depth", 0))
+    decode_s = float(o.get("decode_step_s", 0.0))
+    prefill_tok_s = float(o.get("prefill_token_s", 0.0))
+    ratio = float(o.get("chunk_ratio", 4.0))
+
+    if decode_s > 0.0 and prefill_tok_s > 0.0:
+        # largest chunk whose modeled cost stays under `ratio` decode steps:
+        # long prompts interleave with decode instead of stalling the batch.
+        budget_tokens = ratio * decode_s / prefill_tok_s
+        chunk = SERVE_CHUNK_SIZES[0]
+        for c in SERVE_CHUNK_SIZES:
+            if c <= budget_tokens:
+                chunk = c
+    else:
+        chunk = 32  # no stats yet: middle of the candidate set
+    chunk = min(chunk, max_len)
+
+    plan = {
+        "slots": slots,
+        "chunk": chunk,
+        # admission fills every free slot in one tick; under light load the
+        # queue bounds it so the report shows what will actually happen
+        "admit": slots if queue_depth == 0 else min(slots, queue_depth),
+        "replan_every": int(o.get("replan_every", 32)),
+        "modeled_chunk_cost_steps": round(chunk * prefill_tok_s / decode_s, 2)
+                                    if decode_s > 0 else None,
+    }
+    out = g.clone()
+    for node in out.nodes:
+        node.dataflow["serve_plan"] = dict(plan)
+    ctx.artifacts.update(plan)
+    return out
+
+
+register_pass(Pass(
+    name="serve_schedule",
+    fn=_serve_schedule_fn,
+    description="Serving-schedule planning: stage stats -> slot/chunk plan "
+                "for the continuous-batching scheduler",
 ))
 
 

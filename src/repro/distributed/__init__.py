@@ -1,7 +1,9 @@
+from .compat import AxisType, make_mesh, set_mesh, shard_map
 from .sharding import (BASELINE_RULES, Rules, activation_spec, batch_axes_for,
                        param_partition_specs, param_shardings, rules_for)
 from .collectives import ps_sync, ring_allreduce
 
 __all__ = ["Rules", "BASELINE_RULES", "rules_for", "param_partition_specs",
            "param_shardings", "activation_spec", "batch_axes_for",
-           "ring_allreduce", "ps_sync"]
+           "ring_allreduce", "ps_sync",
+           "AxisType", "make_mesh", "set_mesh", "shard_map"]

@@ -22,7 +22,9 @@ from jax import lax
 
 
 def _axis_size(axis_name: str) -> int:
-    return lax.axis_size(axis_name)
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)  # old jax: count participants directly
 
 
 def ring_allreduce(x: jax.Array, axis_name: str) -> jax.Array:

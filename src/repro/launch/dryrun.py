@@ -92,7 +92,7 @@ def lower_one(arch: str, shape_name: str, mesh, rules=None, cfg=None,
         jitted = jax.jit(step, in_shardings=(state_shardings, batch_shardings),
                          out_shardings=(state_shardings, repl),
                          donate_argnums=(0,))
-        with jax.set_mesh(mesh):
+        with mesh_lib.set_mesh(mesh):
             lowered = jitted.lower(state_abs, inputs)
 
     elif shape.kind == "prefill":
@@ -114,7 +114,7 @@ def lower_one(arch: str, shape_name: str, mesh, rules=None, cfg=None,
         jitted = jax.jit(step, in_shardings=(pshard, batch_shardings),
                          out_shardings=(logits_spec,
                                         SS.to_shardings(cache_specs, mesh)))
-        with jax.set_mesh(mesh):
+        with mesh_lib.set_mesh(mesh):
             lowered = jitted.lower(model.abstract(), inputs)
 
     else:  # decode
@@ -133,7 +133,7 @@ def lower_one(arch: str, shape_name: str, mesh, rules=None, cfg=None,
         jitted = jax.jit(step, in_shardings=(pshard, cache_shardings, tok_shard),
                          out_shardings=(logits_spec, cache_shardings),
                          donate_argnums=(1,))
-        with jax.set_mesh(mesh):
+        with mesh_lib.set_mesh(mesh):
             lowered = jitted.lower(model.abstract(), caches_abs,
                                    inputs["tokens"])
 
@@ -141,10 +141,19 @@ def lower_one(arch: str, shape_name: str, mesh, rules=None, cfg=None,
     return lowered, compiled, model, baxes
 
 
+def _cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on new jax, a one-element
+    list of dicts on older releases; normalize to a dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def analyze(arch: str, shape_name: str, mesh_name: str, lowered, compiled,
             model) -> dict:
     """Per-device roofline record (cost_analysis is per-device SPMD)."""
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
     coll = cm.collective_bytes_from_hlo(hlo)
@@ -231,7 +240,7 @@ def calibrate_depth(arch: str, shape_name: str, mesh, rules=None,
                         microbatch=0, scan_layers=False)
         _, comp, _, _ = lower_one(arch, shape_name, mesh, rules, cfg=c,
                                   seq_shard=seq_shard)
-        ca = comp.cost_analysis() or {}
+        ca = _cost_analysis(comp)
         coll = cm.collective_bytes_from_hlo(comp.as_text())
         pts[L] = (float(ca.get("flops", 0.0)),
                   float(ca.get("bytes accessed", 0.0)),
@@ -244,6 +253,21 @@ def calibrate_depth(arch: str, shape_name: str, mesh, rules=None,
         slope = (x_hi - x_lo) / (hi - lo)
         out[key] = max(x_lo + slope * (L - lo), 0.0)
     return out
+
+
+def serve_plan_for(cfg, shape) -> dict:
+    """serve_schedule plan for a decode shape (slots = the decode batch)."""
+    from repro.core import pipeline
+    from repro.serving.scheduler import serve_plan_graph
+
+    g = serve_plan_graph(cfg.name, shape.global_batch, cfg.d_model,
+                         cfg.d_ff or cfg.d_model, cfg.vocab)
+    _, report = pipeline.optimize(
+        g, passes=("serve_schedule",),
+        options={"slots": shape.global_batch, "max_len": shape.seq_len})
+    plan = dict(report.passes[-1].summary)
+    plan["cache_hit"] = report.cache_hit
+    return plan
 
 
 def run_one(arch: str, shape_name: str, mesh_name: str, out=None,
@@ -273,6 +297,13 @@ def run_one(arch: str, shape_name: str, mesh_name: str, out=None,
             "useful_flops_ratio": (rec["model_flops_per_device"] / cal["flops"])
                                   if cal["flops"] else 0.0,
         }
+    if INPUT_SHAPES[shape_name].kind == "decode":
+        # decode shapes are serving shapes: record what the serve_schedule
+        # pass would plan for this (slots, max_len) — the same code path the
+        # ServingEngine's scheduler replans through at runtime.
+        with timer.stage("serve_plan"):
+            rec["serve_plan"] = serve_plan_for(model.cfg,
+                                               INPUT_SHAPES[shape_name])
     rec["stages"] = timer.as_dict()
     rec["compile_s"] = round(time.time() - t0, 1)
     if verbose:
@@ -282,7 +313,7 @@ def run_one(arch: str, shape_name: str, mesh_name: str, out=None,
               f"peak {rec['memory']['peak_estimate']/2**30:6.2f} GiB "
               f"fits {rec['fits_hbm']} ({rec['compile_s']}s)")
         print(f"   memory_analysis: {compiled.memory_analysis()}")
-        ca = compiled.cost_analysis() or {}
+        ca = _cost_analysis(compiled)
         print(f"   cost_analysis: flops={ca.get('flops')} "
               f"bytes={ca.get('bytes accessed')}")
     return rec

@@ -1,24 +1,29 @@
-"""Production meshes.
+"""Production meshes + the jax version-compat shim used to build them.
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state (jax locks the device count on first backend init).
+
+``AxisType`` / ``make_mesh`` / ``set_mesh`` come from
+``repro.distributed.compat``: on jax without ``sharding.AxisType`` /
+``jax.set_mesh`` they degrade to the legacy spelling (plain meshes, the
+``with mesh:`` context) instead of requiring a newer toolchain — this is
+what lets ``launch/dryrun.py`` and ``tests/test_distributed.py`` run (not
+skip) on older jax.
 """
 from __future__ import annotations
 
-import jax
+from repro.distributed.compat import (AxisType, HAS_AXIS_TYPES, make_mesh,
+                                      set_mesh)
+
+__all__ = ["AxisType", "HAS_AXIS_TYPES", "make_mesh", "set_mesh",
+           "make_production_mesh", "make_debug_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-
-
-def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_devices: int, *, multi_pod: bool = False):

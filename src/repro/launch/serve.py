@@ -1,11 +1,18 @@
-"""End-to-end serving driver: batched continuous decoding.
+"""End-to-end serving driver: scheduler-planned continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --requests 8 --prompt-len 16 --max-new 12
+
+Requests go through the scheduler subsystem (``repro.serving.scheduler``):
+batched admission, chunked prefill interleaved with decode, and the
+``serve_schedule`` pass re-planning the chunk budget from observed stage
+stats.  Exits nonzero when the batched decode loop produced no throughput —
+CI runs this as the serving smoke check.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -25,6 +32,13 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--prefill-mode", default=None,
+                    choices=[None, "chunked", "batched", "serial"],
+                    help="default: chunked for attention archs, batched "
+                         "for recurrent ones; serial is the pre-scheduler "
+                         "one-at-a-time baseline")
+    ap.add_argument("--replan-every", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -37,7 +51,9 @@ def main(argv=None):
     model = Model(cfg)
     params = model.init(jax.random.key(args.seed))
     engine = ServingEngine(model, params, slots=args.slots,
-                           max_len=args.max_len)
+                           max_len=args.max_len, chunk=args.chunk,
+                           prefill_mode=args.prefill_mode,
+                           replan_every=args.replan_every)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         engine.submit(Request(
@@ -47,10 +63,23 @@ def main(argv=None):
     t0 = time.time()
     engine.run()
     dt = time.time() - t0
+    stats = engine.stats()
     total_tokens = args.requests * args.max_new
+    decode_tps = stats.get("decode_tokens_per_s", 0.0)
     print(f"served {args.requests} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s batched decode)")
+          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s overall, "
+          f"{decode_tps:.1f} tok/s batched decode)")
+    print(f"plan: {stats['plan']}")
+    for stage, s in stats["stages"].items():
+        print(f"  stage {stage}: {s['calls']} calls, "
+              f"mean {s['mean_s'] * 1e3:.2f} ms")
+    if "plan_cache_hit" in stats:
+        print(f"  serve_schedule replan cache_hit={stats['plan_cache_hit']}")
+    if not decode_tps > 0:
+        print("FAIL: batched decode produced no throughput", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -315,11 +315,18 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
 
 
 def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
-                       *, cfg) -> tuple[jax.Array, KVCache]:
+                       *, cfg, lengths: jax.Array | None = None
+                       ) -> tuple[jax.Array, KVCache]:
     """Prefill: run full-sequence attention AND populate the cache.
 
     Used by prefill_32k.  For a sliding-window cache (W < S) only the last W
     positions land in the ring buffer.
+
+    ``lengths`` (B,) enables a right-padded multi-sequence batch: positions
+    at or beyond a row's length are recorded as empty (-1) and the cache
+    length is per-row, so each slot decodes from its own prompt end.  Padded
+    keys sit *after* every valid query position, so causal masking already
+    keeps them out of the prefill attention itself.
     """
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
@@ -343,9 +350,81 @@ def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
     slots = tail_pos % W
     k_cache = cache.k.at[:, slots].set(k[:, S - take:].astype(cache.k.dtype))
     v_cache = cache.v.at[:, slots].set(v[:, S - take:].astype(cache.v.dtype))
-    positions_c = cache.positions.at[:, slots].set(
-        jnp.broadcast_to(tail_pos, (B, take)))
+    written = jnp.broadcast_to(tail_pos, (B, take))
+    if lengths is not None:
+        written = jnp.where(written < lengths[:, None], written, -1)
+    positions_c = cache.positions.at[:, slots].set(written)
+    length = (jnp.full((B,), S, jnp.int32) if lengths is None
+              else lengths.astype(jnp.int32))
     new_cache = KVCache(k=k_cache, v=v_cache, positions=positions_c,
-                        length=jnp.full((B,), S, jnp.int32))
+                        length=length)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
+                             cache: KVCache, *, cfg, offsets: jax.Array,
+                             n_new: jax.Array) -> tuple[jax.Array, KVCache]:
+    """Chunked prefill: extend the cache by up to C prompt tokens per row.
+
+    x: (B, C, d) — the next prompt chunk per row, right-padded.
+    offsets: (B,) int32 — tokens already in each row's cache (its length).
+    n_new: (B,) int32 in [0, C] — valid tokens this chunk; rows with 0 are
+    bystanders (mid-decode or idle slots) and their cache is untouched.
+
+    Chunk queries attend to everything the row has cached so far *plus* the
+    chunk itself (written first), with per-slot position masking — the same
+    ring-buffer discipline as decode, vectorized over C query positions.
+    This is what lets a long prompt interleave with decode steps instead of
+    stalling the whole batch behind a monolithic prefill.
+    """
+    B, C, _ = x.shape
+    hd = cfg.resolved_head_dim
+    W = cache.k.shape[1]
+    q = _project(p, x, "wq")                    # (B, C, H, D)
+    k_new = _project(p, x, "wk")                # (B, C, K, D)
+    v_new = _project(p, x, "wv")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k_new = rms_norm(k_new, p["k_norm"])
+    pos = offsets[:, None] + jnp.arange(C)[None, :]          # (B, C)
+    if cfg.rope_fraction > 0:
+        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        q = apply_rope(q, pos, inv)
+        k_new = apply_rope(k_new, pos, inv)
+
+    # masked ring-buffer write: padded/bystander entries write back the old
+    # value, so the scatter is a no-op exactly where n_new says it must be
+    valid_new = jnp.arange(C)[None, :] < n_new[:, None]      # (B, C)
+    slot = (pos % W).astype(jnp.int32)
+    bidx = jnp.arange(B)[:, None]
+    old_k = cache.k[bidx, slot]
+    old_v = cache.v[bidx, slot]
+    sel = valid_new[..., None, None]
+    k_cache = cache.k.at[bidx, slot].set(
+        jnp.where(sel, k_new.astype(cache.k.dtype), old_k))
+    v_cache = cache.v.at[bidx, slot].set(
+        jnp.where(sel, v_new.astype(cache.v.dtype), old_v))
+    positions = cache.positions.at[bidx, slot].set(
+        jnp.where(valid_new, pos, cache.positions[bidx, slot]))
+    length = jnp.where(n_new > 0, offsets + n_new, cache.length) \
+        .astype(jnp.int32)
+
+    # chunk queries over the whole (just-updated) cache, masked per slot
+    K = k_cache.shape[2]
+    G = q.shape[2] // K
+    qg = q.reshape(B, C, K, G, hd)
+    s = jnp.einsum("bckgd,bwkd->bkgcw", qg, k_cache).astype(jnp.float32) \
+        / np.sqrt(hd)
+    attend = (positions[:, None, :] >= 0) \
+        & (positions[:, None, :] <= pos[:, :, None])         # (B, C, W)
+    if cfg.sliding_window:
+        attend &= positions[:, None, :] > pos[:, :, None] - cfg.sliding_window
+    s = jnp.where(attend[:, None, None, :, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgcw,bwkd->bckgd", w, v_cache).reshape(
+        B, C, q.shape[2], hd)
+    new_cache = KVCache(k=k_cache, v=v_cache, positions=positions,
+                        length=length)
+    y = jnp.einsum("bchk,hkd->bcd", out, p["wo"].astype(x.dtype))
     return y, new_cache

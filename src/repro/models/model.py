@@ -179,9 +179,23 @@ class Model:
 
         ``max_len`` sizes the KV cache for the decode horizon (defaults to
         the prompt length — pass the serving budget for real use).
+
+        ``batch["lengths"]`` (B,) makes this a padded multi-sequence prefill:
+        prompts are right-padded to a common S, per-row logits come from
+        position ``lengths[b]-1`` and the returned caches carry per-row
+        lengths/valid positions — one jitted call prefills a whole admission
+        batch.  Attention families only: an SSM scan has no way to stop at a
+        per-row length (the serving engine groups equal-length prompts for
+        those instead).
         """
         cfg = self.cfg
         tokens = batch["tokens"]
+        lengths = batch.get("lengths")
+        if lengths is not None and not cfg.attention_only:
+            raise NotImplementedError(
+                "padded-batch prefill (lengths=...) needs attention-only "
+                f"layers; {cfg.family} carries recurrent state through the "
+                "padded tail")
         B, S = tokens.shape
         enc_out = None
         src_len = 0
@@ -214,7 +228,8 @@ class Model:
                     kv=kv, ssm=T.S.SSMCache(state=st,
                                             conv=_conv_tail(hn, lp, cfg)))
             else:
-                att, kv = A.prefill_into_cache(lp["attn"], hn, cache.kv, cfg=cfg)
+                att, kv = A.prefill_into_cache(lp["attn"], hn, cache.kv,
+                                               cfg=cfg, lengths=lengths)
                 h = h + att
                 new_cache = new_cache._replace(kv=kv)
             if cfg.is_encoder_decoder:
@@ -239,20 +254,106 @@ class Model:
 
         x, new_caches = T.scan_or_unroll(body, x, (params["layers"], caches),
                                          cfg.scan_layers)
-        x = rms_norm(x[:, -1:], params["final_norm"])
+        if lengths is None:
+            x = x[:, -1:]
+        else:  # per-row last valid prompt position of the padded batch
+            idx = jnp.clip(lengths - 1, 0, S - 1).astype(jnp.int32)
+            x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        x = rms_norm(x, params["final_norm"])
         logits = unembed(params["embed"]["tokens"], x)[:, 0]
         return logits, new_caches
 
-    def serve_step(self, params, caches, tokens, batch_axes=()):
-        """One decode step.  tokens: (B, 1) -> (logits (B, V), new caches)."""
+    def prefill_chunk(self, params, caches, tokens, offsets, n_new,
+                      batch_axes=()):
+        """Advance a chunked prefill by up to C tokens per row, in place.
+
+        tokens: (B, C) right-padded chunk per row; offsets: (B,) tokens each
+        row has already prefilled; n_new: (B,) valid tokens this chunk (0 =
+        bystander row, cache untouched).  Returns (logits at each row's last
+        valid chunk position (B, V), updated caches).  B is the *full* slot
+        batch — decode-phase rows ride along with n_new=0, which is what
+        lets one fixed-shape jitted function interleave prefill chunks with
+        decode steps.  Attention families only (see prefill_step).
+        """
+        cfg = self.cfg
+        if not cfg.attention_only:
+            raise NotImplementedError(
+                f"chunked prefill needs attention-only layers, not "
+                f"{cfg.family}")
+        B, C = tokens.shape
+        x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
+
+        def body(carry, inp):
+            h = carry
+            lp, cache = inp
+            hn = rms_norm(h, lp["norm1"])
+            att, kv = A.prefill_chunk_into_cache(
+                lp["attn"], hn, cache.kv, cfg=cfg, offsets=offsets,
+                n_new=n_new)
+            h = h + att
+            h2 = rms_norm(h, lp["norm2"])
+            if cfg.family == "moe":
+                mo, _ = T.M.moe_block(lp["moe"], h2, cfg=cfg, mesh=self.mesh,
+                                      batch_axes=batch_axes)
+                if cfg.moe_dense_residual:
+                    mo = mo + T.swiglu(lp["dense_mlp"], h2)
+                h = h + mo
+            elif cfg.family == "audio":
+                h = h + T.gelu_mlp(lp["mlp"], h2)
+            else:
+                h = h + T.swiglu(lp["mlp"], h2)
+            return h, cache._replace(kv=kv)
+
+        x, new_caches = T.scan_or_unroll(body, x, (params["layers"], caches),
+                                         cfg.scan_layers)
+        idx = jnp.clip(n_new - 1, 0, C - 1).astype(jnp.int32)
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        x = rms_norm(x, params["final_norm"])
+        logits = unembed(params["embed"]["tokens"], x)[:, 0]
+        return logits, new_caches
+
+    def serve_step(self, params, caches, tokens, batch_axes=(), live=None):
+        """One decode step.  tokens: (B, 1) -> (logits (B, V), new caches).
+
+        ``live`` (B,) bool keeps non-live rows' caches untouched: slots that
+        are empty or still prefilling share the batched decode dispatch
+        without their ring buffers advancing.
+        """
         cfg = self.cfg
         x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
         x, new_caches = T.decoder_stack_decode(
             params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
             batch_axes=batch_axes, use_pallas=self.use_pallas)
+        if live is not None:
+            def keep(new, old):
+                m = live.reshape((1, live.shape[0]) + (1,) * (new.ndim - 2))
+                return jnp.where(m, new, old)
+            new_caches = jax.tree.map(keep, new_caches, caches)
         x = rms_norm(x, params["final_norm"])
         logits = unembed(params["embed"]["tokens"], x)[:, 0]
         return logits, new_caches
+
+    def reset_cache_rows(self, caches, rows):
+        """Mark slot rows ``rows`` ((B,) bool) empty for request refill.
+
+        Only the *validity* metadata needs clearing (positions -> -1,
+        length -> 0, SSM state/conv -> 0); stale K/V payloads are dead the
+        moment no position points at them.
+        """
+        def clear(leaf, is_positions=False):
+            m = rows.reshape((1, rows.shape[0]) + (1,) * (leaf.ndim - 2))
+            if is_positions:
+                return jnp.where(m, jnp.full_like(leaf, -1), leaf)
+            return jnp.where(m, jnp.zeros_like(leaf), leaf)
+
+        kv = caches.kv
+        if hasattr(kv, "positions"):  # a KVCache, not the () placeholder
+            kv = kv._replace(positions=clear(kv.positions, is_positions=True),
+                             length=clear(kv.length))
+        ssm = caches.ssm
+        if ssm != ():
+            ssm = jax.tree.map(clear, ssm)
+        return caches._replace(kv=kv, ssm=ssm)
 
     # ------------------------------------------------------------ input specs
     def input_specs(self, shape: InputShape) -> dict[str, Any]:

@@ -1,3 +1,7 @@
 from .engine import Request, ServingEngine
+from .scheduler import (RequestState, ScheduledRequest, Scheduler,
+                        SchedulerConfig, TickPlan, serve_plan_graph)
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "Request", "Scheduler", "SchedulerConfig",
+           "RequestState", "ScheduledRequest", "TickPlan",
+           "serve_plan_graph"]

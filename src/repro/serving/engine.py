@@ -1,30 +1,41 @@
-"""Batched serving engine: static-batch continuous decoding.
+"""Continuous-batching serving engine: executes the scheduler's TickPlans.
 
-A fixed decode batch of ``slots``; requests are admitted into free slots,
-prefilled one at a time into their slot's cache region, and all live slots
-decode together every step (the serve_step the dry-run lowers).  Finished
-slots (EOS or max tokens) are retired and refilled — a compact version of
-the continuous-batching loop production servers run.
+A fixed decode batch of ``slots``.  Each tick the scheduler
+(``repro.serving.scheduler``) decides admissions, prefill-chunk assignments
+and the decode set; the engine turns those into (at most) three batched
+jitted dispatches:
 
-The KV caches are the engine's state; per-slot admission writes a freshly
-prefilled cache into the batch dimension of the stacked caches.
+  * **admit** — free slot rows are recycled (`Model.reset_cache_rows`); in
+    the one-shot modes the whole admission batch is prefilled in a single
+    padded multi-sequence ``prefill_step`` call;
+  * **prefill_chunk** — one fixed-shape ``(slots, chunk)`` call advances
+    every prefilling slot by up to ``chunk`` prompt tokens *in the same tick
+    decode runs*, so long prompts interleave with decoding instead of
+    stalling the batch;
+  * **decode** — all DECODE slots step together (``serve_step``) with a
+    ``live`` mask keeping bystander rows' caches untouched.
+
+The KV caches are the engine's state; every dispatch updates slot rows in
+place, so retire/refill never copies surviving requests.
 
 The engine shares the optimization pipeline's stage instrumentation
-(``repro.core.pipeline.StageTimer``): every prefill and batched decode step
-is timed, and ``stats()`` returns the same structured per-stage record the
-pass manager emits, so serving traces and PassReports read alike.
+(``repro.core.pipeline.StageTimer``): every stage is timed, and ``stats()``
+returns the same structured per-stage record the pass manager emits plus
+the scheduler's current serve_schedule plan — serving traces and
+PassReports read alike.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pipeline import StageTimer
+
+from .scheduler import (RequestState, Scheduler, SchedulerConfig, TickPlan,
+                        serve_plan_graph)
 
 
 @dataclasses.dataclass
@@ -36,86 +47,229 @@ class Request:
     done: bool = False
 
 
+def _serving_jits(model, max_len: int) -> dict:
+    """Jitted serving steps, cached **on the model**: every engine over the
+    same model shares one compiled prefill/chunk/decode/reset, so spinning
+    up an engine (benchmarks do it per policy) never recompiles."""
+    cache = getattr(model, "_serving_jit_cache", None)
+    if cache is None:
+        cache = {}
+        model._serving_jit_cache = cache
+    if max_len not in cache:
+        cache[max_len] = {
+            "serve": jax.jit(
+                lambda p, c, t, live: model.serve_step(p, c, t, live=live)),
+            "prefill": jax.jit(
+                lambda p, b: model.prefill_step(p, b, max_len=max_len)),
+            "chunk": jax.jit(
+                lambda p, c, t, off, nn: model.prefill_chunk(p, c, t, off, nn)),
+            "reset": jax.jit(
+                lambda c, rows: model.reset_cache_rows(c, rows)),
+        }
+    return cache[max_len]
+
+
 class ServingEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
-                 eos_id: int = -1, greedy: bool = True):
+                 eos_id: int = -1, greedy: bool = True,
+                 prefill_mode: str | None = None, chunk: int = 32,
+                 replan_every: int = 32):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.greedy = greedy
-        self.queue: deque[Request] = deque()
-        self.active: list[Request | None] = [None] * slots
         self.timer = StageTimer()
         self.tokens_out = 0        # every generated token (prefill + decode)
         self._decode_tokens = 0    # decode-loop tokens only (throughput)
+        self._prefill_tokens = 0   # prompt tokens pushed through prefill
+
+        cfg = model.cfg
+        if prefill_mode is None:
+            prefill_mode = "chunked" if cfg.attention_only else "batched"
+        if prefill_mode == "chunked" and not cfg.attention_only:
+            raise ValueError(f"{cfg.family} cannot run chunked prefill; "
+                             f"use prefill_mode='batched'")
+        self.scheduler = Scheduler(
+            SchedulerConfig(slots=slots, max_len=max_len, chunk=chunk,
+                            prefill_mode=prefill_mode,
+                            replan_every=replan_every),
+            plan_graph=serve_plan_graph(
+                cfg.name, slots, cfg.d_model, cfg.d_ff or cfg.d_model,
+                cfg.vocab))
+        self.scheduler.eos_id = None if eos_id < 0 else eos_id
+
         self.caches = model.init_caches(slots, max_len)
         self._last_tokens = jnp.zeros((slots, 1), jnp.int32)
-        self._serve = jax.jit(lambda p, c, t: model.serve_step(p, c, t))
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill_step(p, b, max_len=max_len))
+        jits = _serving_jits(model, max_len)
+        self._serve = jits["serve"]
+        self._prefill = jits["prefill"]
+        self._chunk_step = jits["chunk"]
+        self._reset_rows = jits["reset"]
 
-    # -- admission -----------------------------------------------------------
+    # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.scheduler.submit(req)
 
-    def _admit(self) -> None:
-        for slot in range(self.slots):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            with self.timer.stage("prefill"):
-                logits, fresh = self._prefill(
-                    self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
-                jax.block_until_ready(logits)
-            tok = self._pick(logits)[0]
-            req.generated.append(int(tok))
-            self.tokens_out += 1  # first token comes out of the prefill
-            # splice the prefilled slot-0 cache into this slot
-            self.caches = jax.tree.map(
-                lambda full, one: full.at[:, slot].set(one[:, 0])
-                if hasattr(full, "at") else full,
-                self.caches, fresh)
-            self._last_tokens = self._last_tokens.at[slot, 0].set(tok)
-            self.active[slot] = req
-
-    def _pick(self, logits: jax.Array) -> jax.Array:
-        return jnp.argmax(logits[..., :self.model.cfg.vocab], axis=-1).astype(jnp.int32)
-
-    # -- one engine tick ------------------------------------------------------
     def step(self) -> int:
-        self._admit()
-        live = [i for i, r in enumerate(self.active) if r is not None]
-        if not live:
-            return 0
-        with self.timer.stage("decode"):
-            logits, self.caches = self._serve(self.params, self.caches,
-                                              self._last_tokens)
-            toks = self._pick(logits)
-            jax.block_until_ready(toks)
-        for slot in live:
-            req = self.active[slot]
-            t = int(toks[slot])
-            req.generated.append(t)
-            self.tokens_out += 1
-            self._decode_tokens += 1
-            self._last_tokens = self._last_tokens.at[slot, 0].set(t)
-            if t == self.eos_id or len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                self.active[slot] = None
-        return len(live)
+        """One engine tick: execute the scheduler's plan.  Returns the
+        number of slots that produced a token this tick."""
+        plan = self.scheduler.plan_tick()
+        produced = 0
+        if plan.admissions:
+            with self.timer.stage("admit"):
+                self._admit(plan)
+            if self.scheduler.cfg.prefill_mode != "chunked":
+                produced += len(plan.admissions)
+        if plan.prefill:
+            with self.timer.stage("prefill_chunk"):
+                produced += self._prefill_chunks(plan)
+        if plan.decode_slots:
+            with self.timer.stage("decode"):
+                produced += self._decode(plan)
+        self._maybe_replan()
+        return produced
 
     def run(self, max_steps: int = 10_000) -> None:
         steps = 0
-        while (self.queue or any(a is not None for a in self.active)) \
-                and steps < max_steps:
+        while self.scheduler.pending() and steps < max_steps:
             self.step()
             steps += 1
 
+    # -- admission ------------------------------------------------------------
+    def _admit(self, plan: TickPlan) -> None:
+        if self.scheduler.cfg.prefill_mode == "chunked":
+            # recycle the admitted rows so the first chunk sees an empty
+            # ring buffer; one-shot modes skip this — their splice below
+            # overwrites every cache leaf of those rows anyway
+            rows = np.zeros((self.slots,), bool)
+            for sreq in plan.admissions:
+                rows[sreq.slot] = True
+            self.caches = self._reset_rows(self.caches, jnp.asarray(rows))
+            return  # prefill happens chunk by chunk from the next plan on
+
+        # one-shot modes: batched padded prefill of the whole admission set.
+        # Recurrent families can't mask a padded tail out of their state
+        # scan, so they batch equal-length groups instead of padding.
+        paddable = self.model.cfg.attention_only
+        if self.scheduler.cfg.prefill_mode == "serial" or \
+                (len(plan.admissions) == 1):
+            groups = [[s] for s in plan.admissions]
+        elif paddable:
+            groups = [list(plan.admissions)]
+        else:
+            by_len: dict[int, list] = {}
+            for s in plan.admissions:
+                by_len.setdefault(s.prompt_len, []).append(s)
+            groups = list(by_len.values())
+        for group in groups:
+            self._prefill_group(group, padded=paddable and len(group) > 1)
+
+    def _prefill_group(self, group, padded: bool) -> None:
+        lens = [s.prompt_len for s in group]
+        S = max(lens)
+        toks = np.zeros((len(group), S), np.int32)
+        for i, s in enumerate(group):
+            toks[i, :lens[i]] = s.req.prompt
+        batch = {"tokens": jnp.asarray(toks)}
+        if padded:
+            batch["lengths"] = jnp.asarray(lens, jnp.int32)
+        logits, fresh = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        slots_arr = jnp.asarray([s.slot for s in group], jnp.int32)
+        # splice the freshly prefilled rows into their slots' cache rows
+        self.caches = jax.tree.map(
+            lambda full, one: full.at[:, slots_arr].set(one),
+            self.caches, fresh)
+        toks_out = self._pick(logits)
+        for i, sreq in enumerate(group):
+            t = int(toks_out[i])
+            self._last_tokens = self._last_tokens.at[sreq.slot, 0].set(t)
+            self._prefill_tokens += lens[i]
+            self.tokens_out += 1  # first token comes out of the prefill
+            self.scheduler.note_admitted_prefilled(sreq, t)
+
+    # -- chunked prefill ------------------------------------------------------
+    def _prefill_chunks(self, plan: TickPlan) -> int:
+        C = self.scheduler.cfg.chunk
+        toks = np.zeros((self.slots, C), np.int32)
+        offsets = np.zeros((self.slots,), np.int32)
+        n_new = np.zeros((self.slots,), np.int32)
+        for a in plan.prefill:
+            toks[a.slot, :a.n_new] = a.sreq.req.prompt[a.start:a.start + a.n_new]
+            offsets[a.slot] = a.start
+            n_new[a.slot] = a.n_new
+        logits, self.caches = self._chunk_step(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(offsets), jnp.asarray(n_new))
+        toks_out = self._pick(logits)
+        jax.block_until_ready(toks_out)
+        produced = 0
+        for a in plan.prefill:
+            self._prefill_tokens += a.n_new
+            done = a.start + a.n_new >= a.sreq.prompt_len
+            first = int(toks_out[a.slot]) if done else None
+            if done:
+                self._last_tokens = \
+                    self._last_tokens.at[a.slot, 0].set(first)
+                self.tokens_out += 1
+                produced += 1
+            self.scheduler.note_prefilled(a.sreq, a.n_new, first)
+        return produced
+
+    # -- decode ---------------------------------------------------------------
+    def _decode(self, plan: TickPlan) -> int:
+        live = np.zeros((self.slots,), bool)
+        for slot in plan.decode_slots:
+            live[slot] = True
+        logits, self.caches = self._serve(self.params, self.caches,
+                                          self._last_tokens,
+                                          jnp.asarray(live))
+        toks = self._pick(logits)
+        jax.block_until_ready(toks)
+        for slot in plan.decode_slots:
+            t = int(toks[slot])
+            self.tokens_out += 1
+            self._decode_tokens += 1
+            self._last_tokens = self._last_tokens.at[slot, 0].set(t)
+            self.scheduler.note_decoded(slot, t)
+        return len(plan.decode_slots)
+
+    def _pick(self, logits: jax.Array) -> jax.Array:
+        return jnp.argmax(logits[..., :self.model.cfg.vocab],
+                          axis=-1).astype(jnp.int32)
+
+    # -- re-planning / stats --------------------------------------------------
+    def _maybe_replan(self) -> None:
+        import time
+        decode = self.timer.totals.get("decode", 0.0)
+        decode_calls = self.timer.counts.get("decode", 0)
+        prefill_s = (self.timer.totals.get("prefill_chunk", 0.0)
+                     + self.timer.totals.get("admit", 0.0))
+        t0 = time.perf_counter()
+        plan = self.scheduler.maybe_replan(
+            decode_step_s=decode / decode_calls if decode_calls else 0.0,
+            prefill_token_s=prefill_s / self._prefill_tokens
+            if self._prefill_tokens else 0.0)
+        if plan is not None:  # record only ticks that actually re-planned
+            dt = time.perf_counter() - t0
+            self.timer.totals["replan"] = \
+                self.timer.totals.get("replan", 0.0) + dt
+            self.timer.counts["replan"] = \
+                self.timer.counts.get("replan", 0) + 1
+
     def stats(self) -> dict:
-        """Per-stage timing + throughput, pipeline-report style."""
-        out = {"stages": self.timer.as_dict(), "tokens_out": self.tokens_out}
+        """Per-stage timing + throughput + the scheduler's plan,
+        pipeline-report style."""
+        out = {"stages": self.timer.as_dict(), "tokens_out": self.tokens_out,
+               "prefill_tokens": self._prefill_tokens,
+               "plan": dict(self.scheduler.last_plan),
+               "scheduler": self.scheduler.state_counts()}
+        rep = self.scheduler.last_report
+        if rep is not None:
+            out["plan_report"] = rep.as_dict()
+            out["plan_cache_hit"] = rep.cache_hit
         decode = out["stages"].get("decode")
         if decode and decode["total_s"] > 0:
             out["decode_tokens_per_s"] = self._decode_tokens / decode["total_s"]

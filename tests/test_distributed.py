@@ -1,5 +1,9 @@
 """Multi-device behaviour (subprocesses with forced host device counts):
-collective schedules, sharded MoE == oracle, sharded train step, dry-run."""
+collective schedules, sharded MoE == oracle, sharded train step, dry-run.
+
+All snippets build meshes through ``repro.distributed.compat`` (re-exported
+by ``repro.launch.mesh``) so they run on jax both with and without
+``sharding.AxisType`` / ``jax.set_mesh`` / ``jax.shard_map``."""
 import json
 
 import jax
@@ -7,26 +11,22 @@ import pytest
 
 from conftest import run_multidevice
 
-if not hasattr(jax.sharding, "AxisType"):
-    pytest.skip("multi-device tests need jax with sharding.AxisType "
-                "(mesh axis_types); installed jax predates it",
-                allow_module_level=True)
-
 
 def test_ring_allreduce_and_ps_equal_psum():
     out = run_multidevice("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.distributed import ring_allreduce, ps_sync
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.distributed.compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("x",))
 x = jnp.arange(8*33, dtype=jnp.float32).reshape(8, 33)
 def f(kind):
     def inner(xs):
         if kind == "ring": return ring_allreduce(xs[0], "x")
         if kind == "ps": return ps_sync(xs[0], "x")
         return jax.lax.psum(xs[0], "x")
-    return jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=P("x", None),
-                                 out_specs=P(), check_vma=False))
+    return jax.jit(shard_map(inner, mesh=mesh, in_specs=P("x", None),
+                             out_specs=P(), check_vma=False))
 want = np.asarray(f("psum")(x))
 for kind in ("ring", "ps"):
     got = np.asarray(f(kind)(x))
@@ -40,9 +40,9 @@ def test_sharded_moe_matches_reference():
     out = run_multidevice("""
 import dataclasses, jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import all_configs
+from repro.distributed.compat import make_mesh, set_mesh
 from repro.models import moe as M
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = dataclasses.replace(all_configs()["olmoe-1b-7b"].reduced(),
                           n_experts=8, top_k=2, capacity_factor=8.0)
 rng = np.random.default_rng(0)
@@ -52,7 +52,7 @@ p = {"router": jnp.asarray(rng.normal(size=(d, 8)), jnp.float32),
      "up": jnp.asarray(rng.normal(size=(8, d, ff))*0.05, jnp.float32),
      "down": jnp.asarray(rng.normal(size=(8, ff, d))*0.05, jnp.float32)}
 x = jnp.asarray(rng.normal(size=(4, 8, d)), jnp.float32)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     out, aux = jax.jit(lambda p, x: M.moe_block(p, x, cfg=cfg, mesh=mesh,
                                                 batch_axes=("data",)))(p, x)
 ref = M.moe_reference(p, x, cfg=cfg)
@@ -87,7 +87,7 @@ _, met1 = jax.jit(lambda s, b: m1.train_step(s, b))(s1, batch)
 
 m2 = Model(cfg, mesh=mesh)
 s2 = m2.init_train_state(jax.random.key(0))
-with jax.set_mesh(mesh):
+with mesh_lib.set_mesh(mesh):
     _, met2 = jax.jit(lambda s, b: m2.train_step(s, b, batch_axes=("data",)))(s2, batch)
 np.testing.assert_allclose(float(met1["loss"]), float(met2["loss"]), rtol=2e-4)
 print("TRAIN_SHARDED_OK", float(met1["loss"]), float(met2["loss"]))

@@ -237,6 +237,53 @@ def test_optimize_for_mode_matches_mode_passes():
         pipeline.optimize_for_mode(g, "warp_speed")
 
 
+# -- pass-result caching ------------------------------------------------------
+
+def test_optimize_caches_repeat_calls():
+    pipeline.clear_optimize_cache()
+    g = cnn_zoo.build("squeezenet")
+    _, r1 = pipeline.optimize(g)
+    assert not r1.cache_hit
+    opt2, r2 = pipeline.optimize(g)
+    assert r2.cache_hit
+    assert [p.name for p in r2.passes] == [p.name for p in r1.passes]
+    assert r2.as_dict()["cache_hit"] is True
+    assert pipeline.verify_graph(opt2) == []
+    # different options -> different key
+    _, r3 = pipeline.optimize(g, options={"who": "else"})
+    assert not r3.cache_hit
+    # opting out bypasses the cache entirely
+    _, r4 = pipeline.optimize(g, cache=False)
+    assert not r4.cache_hit
+
+
+def test_optimize_cache_key_tracks_graph_content():
+    g = cnn_zoo.build("squeezenet")
+    pipeline.optimize(g)
+    g2 = cnn_zoo.build("squeezenet")
+    g2.nodes[0].attrs["dilation"] = 3  # same topology, different content
+    _, r = pipeline.optimize(g2)
+    assert not r.cache_hit
+
+
+def test_optimize_cache_hits_are_isolated_clones():
+    pipeline.clear_optimize_cache()
+    g = cnn_zoo.build("mobilenet")
+    a, _ = pipeline.optimize(g)
+    a.nodes[0].dataflow["vandalism"] = True
+    b, rb = pipeline.optimize(g)
+    assert rb.cache_hit
+    assert "vandalism" not in b.nodes[0].dataflow
+
+
+def test_graph_fingerprint_stability():
+    a = cnn_zoo.build("mobilenet")
+    b = cnn_zoo.build("mobilenet")
+    assert pipeline.graph_fingerprint(a) == pipeline.graph_fingerprint(b)
+    b.nodes[3].dataflow["link_group"] = 9
+    assert pipeline.graph_fingerprint(a) != pipeline.graph_fingerprint(b)
+
+
 def test_stage_timer():
     t = pipeline.StageTimer()
     with t.stage("a"):

@@ -1,0 +1,249 @@
+"""Scheduler subsystem: chunked-prefill equivalence, batch admission,
+FIFO fairness, retire/refill cache isolation, serve_schedule planning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import all_configs
+from repro.core import pipeline
+from repro.models.model import Model
+from repro.serving import (Request, RequestState, Scheduler, SchedulerConfig,
+                           ServingEngine, serve_plan_graph)
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = all_configs()["qwen3-1.7b"].reduced()
+    m = Model(cfg)
+    return cfg, m, m.init(jax.random.key(0))
+
+
+# -- model-level prefill equivalence ------------------------------------------
+
+def test_chunked_prefill_matches_oneshot(dense_model):
+    """Prefilling a prompt in C-token chunks must produce the same logits
+    and the same subsequent decode as the monolithic prefill_step."""
+    cfg, m, params = dense_model
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, 11).astype(np.int32)
+
+    ref_logits, ref_caches = m.prefill_step(
+        params, {"tokens": jnp.asarray(prompt)[None]}, max_len=64)
+
+    caches = m.init_caches(1, 64)
+    off = jnp.zeros((1,), jnp.int32)
+    C = 4
+    for start in range(0, len(prompt), C):
+        n = min(C, len(prompt) - start)
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n] = prompt[start:start + n]
+        logits, caches = m.prefill_chunk(
+            params, caches, jnp.asarray(chunk), off,
+            jnp.asarray([n], jnp.int32))
+        off = off + n
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=2e-5, atol=2e-6)
+    # decode greedily from both caches: identical continuations
+    t_ref = int(jnp.argmax(ref_logits[0, :cfg.vocab]))
+    t_chk = int(jnp.argmax(logits[0, :cfg.vocab]))
+    assert t_ref == t_chk
+    for _ in range(4):
+        ref_logits, ref_caches = m.serve_step(
+            params, ref_caches, jnp.asarray([[t_ref]], jnp.int32))
+        logits, caches = m.serve_step(
+            params, caches, jnp.asarray([[t_chk]], jnp.int32))
+        t_ref = int(jnp.argmax(ref_logits[0, :cfg.vocab]))
+        t_chk = int(jnp.argmax(logits[0, :cfg.vocab]))
+        assert t_ref == t_chk
+
+
+def test_padded_batch_prefill_matches_single(dense_model):
+    """One padded multi-sequence prefill call == per-request prefills."""
+    cfg, m, params = dense_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, L).astype(np.int32)
+               for L in (6, 9, 12)]
+    S = max(len(p) for p in prompts)
+    toks = np.zeros((len(prompts), S), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :len(p)] = p
+    lens = jnp.asarray([len(p) for p in prompts], jnp.int32)
+    logits, caches = m.prefill_step(
+        params, {"tokens": jnp.asarray(toks), "lengths": lens}, max_len=64)
+    for i, p in enumerate(prompts):
+        ref, _ = m.prefill_step(params, {"tokens": jnp.asarray(p)[None]},
+                                max_len=64)
+        np.testing.assert_allclose(np.asarray(logits[i]), np.asarray(ref[0]),
+                                   rtol=2e-5, atol=2e-6)
+        assert int(caches.kv.length[0, i]) == len(p)
+
+
+def test_padded_prefill_rejected_for_recurrent_families():
+    cfg = all_configs()["mamba2-370m"].reduced()
+    m = Model(cfg)
+    with pytest.raises(NotImplementedError):
+        m.prefill_step(m.init(jax.random.key(0)),
+                       {"tokens": jnp.zeros((2, 8), jnp.int32),
+                        "lengths": jnp.asarray([4, 8], jnp.int32)})
+
+
+# -- scheduler policy (pure logic, no jax) ------------------------------------
+
+def _req(rid, n=8, max_new=4):
+    return Request(rid=rid, prompt=np.zeros((n,), np.int32),
+                   max_new_tokens=max_new)
+
+
+def test_batch_admission_fills_all_free_slots_in_one_tick():
+    sched = Scheduler(SchedulerConfig(slots=4, chunk=16))
+    for rid in range(6):
+        sched.submit(_req(rid))
+    plan = sched.plan_tick()
+    assert [s.req.rid for s in plan.admissions] == [0, 1, 2, 3]
+    assert [s.slot for s in plan.admissions] == [0, 1, 2, 3]
+    assert all(s.state is RequestState.PREFILL for s in plan.admissions)
+    assert len(sched.waiting) == 2
+    # every admitted slot is in this tick's chunk plan, from position 0
+    assert sorted(a.slot for a in plan.prefill) == [0, 1, 2, 3]
+    assert all(a.start == 0 and a.n_new == 8 for a in plan.prefill)
+
+
+def test_chunk_budget_caps_per_tick_prefill():
+    sched = Scheduler(SchedulerConfig(slots=1, chunk=16))
+    sched.submit(_req(0, n=40))
+    plan = sched.plan_tick()
+    (a,) = plan.prefill
+    assert (a.start, a.n_new) == (0, 16)
+    sched.note_prefilled(a.sreq, a.n_new, None)
+    a2 = sched.plan_tick().prefill[0]
+    assert (a2.start, a2.n_new) == (16, 16)
+    sched.note_prefilled(a2.sreq, a2.n_new, None)
+    a3 = sched.plan_tick().prefill[0]
+    assert (a3.start, a3.n_new) == (32, 8)  # tail chunk is short
+    sched.note_prefilled(a3.sreq, a3.n_new, first_token=7)
+    assert a3.sreq.state is RequestState.DECODE
+    assert a3.sreq.req.generated == [7]
+
+
+def test_fifo_admission_under_oversubscription():
+    sched = Scheduler(SchedulerConfig(slots=2, chunk=32))
+    for rid in range(6):
+        sched.submit(_req(rid, max_new=1))
+    admitted = []
+    for _ in range(6):
+        plan = sched.plan_tick()
+        admitted += [s.req.rid for s in plan.admissions]
+        for a in plan.prefill:
+            sched.note_prefilled(a.sreq, a.n_new, first_token=0)
+    assert admitted == [0, 1, 2, 3, 4, 5]  # strict submission order
+    assert [s.req.rid for s in sched.retired] == [0, 1, 2, 3, 4, 5]
+    assert not sched.pending()
+
+
+# -- engine end-to-end --------------------------------------------------------
+
+def test_engine_fifo_and_retire_refill_isolation(dense_model):
+    """Oversubscribed run: every slot serves several requests in turn; each
+    request's greedy output must equal its solo run (retire/refill leaves no
+    cache residue), and completions follow submission order."""
+    cfg, m, params = dense_model
+    rng = np.random.default_rng(4)
+    # equal prompt lengths + equal budgets => completion must be FIFO too
+    # (with ragged prompts a shorter wave-mate may finish prefill first)
+    prompts = [rng.integers(0, cfg.vocab, 9).astype(np.int32)
+               for i in range(6)]
+    eng = ServingEngine(m, params, slots=2, max_len=64, chunk=4)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done and len(r.generated) == 4 for r in reqs)
+    retired = [s.req.rid for s in eng.scheduler.retired]
+    assert retired == sorted(retired)  # FIFO completion under equal budgets
+    for r in reqs:
+        solo = ServingEngine(m, params, slots=1, max_len=64, chunk=4)
+        rr = Request(rid=r.rid, prompt=r.prompt, max_new_tokens=4)
+        solo.submit(rr)
+        solo.run()
+        assert rr.generated == r.generated, r.rid
+
+
+def test_engine_stats_report_stages_and_plan(dense_model):
+    cfg, m, params = dense_model
+    eng = ServingEngine(m, params, slots=2, max_len=64, chunk=8)
+    rng = np.random.default_rng(5)
+    for i in range(3):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab, 12).astype(np.int32),
+                           max_new_tokens=3))
+    eng.run()
+    stats = eng.stats()
+    assert stats["stages"]["prefill_chunk"]["calls"] >= 2
+    assert stats["stages"]["decode"]["calls"] >= 2
+    assert stats["tokens_out"] == 9
+    assert stats["plan"]["chunk"] == 8
+    assert stats["scheduler"]["retired"] == 3
+
+
+# -- serve_schedule pass + replanning -----------------------------------------
+
+def test_serve_schedule_plan_roundtrips_through_optimize():
+    g = serve_plan_graph("qwen3-1.7b", 4, 256, 512, 512)
+    options = {"slots": 4, "max_len": 128, "decode_step_s": 0.002,
+               "prefill_token_s": 0.0001}
+    opt, report = pipeline.optimize(g, passes=("serve_schedule",),
+                                    options=options)
+    plan = report.passes[-1].summary
+    assert plan["slots"] == 4
+    assert plan["chunk"] in pipeline.SERVE_CHUNK_SIZES
+    # chunk obeys the budget: chunk * prefill_token_s <= ratio * decode_step_s
+    assert plan["chunk"] * 0.0001 <= 4.0 * 0.002 + 1e-12
+    # the plan is annotated on the graph like any other metadata rewrite
+    assert all(n.dataflow["serve_plan"]["chunk"] == plan["chunk"]
+               for n in opt.nodes)
+    # identical stats -> pass-result cache hit (re-planning is free)
+    _, report2 = pipeline.optimize(g, passes=("serve_schedule",),
+                                   options=options)
+    assert report2.cache_hit
+    assert report2.passes[-1].summary["chunk"] == plan["chunk"]
+    # slower decode (tighter budget) -> smaller or equal chunk, fresh run
+    _, report3 = pipeline.optimize(
+        g, passes=("serve_schedule",),
+        options={**options, "decode_step_s": 0.0004})
+    assert not report3.cache_hit
+    assert report3.passes[-1].summary["chunk"] <= plan["chunk"]
+
+
+def test_scheduler_replan_adopts_plan_and_hits_cache():
+    cfg = SchedulerConfig(slots=4, max_len=128, chunk=8, replan_every=1)
+    sched = Scheduler(cfg, plan_graph=serve_plan_graph("x", 4, 256, 512, 512))
+    sched.plan_tick()
+    plan = sched.maybe_replan(decode_step_s=0.004, prefill_token_s=0.0001)
+    assert plan is not None and sched.cfg.chunk == plan["chunk"]
+    assert not sched.last_report.cache_hit
+    sched.plan_tick()
+    plan2 = sched.maybe_replan(decode_step_s=0.004, prefill_token_s=0.0001)
+    assert plan2 == plan
+    assert sched.last_report.cache_hit  # steady state replans are free
+    # quantization makes near-identical stats hit too
+    sched.plan_tick()
+    sched.maybe_replan(decode_step_s=0.004002, prefill_token_s=0.00010004)
+    assert sched.last_report.cache_hit
+
+
+def test_engine_replans_during_run(dense_model):
+    cfg, m, params = dense_model
+    eng = ServingEngine(m, params, slots=2, max_len=64, chunk=8,
+                        replan_every=3)
+    rng = np.random.default_rng(6)
+    for i in range(4):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab, 10).astype(np.int32),
+                           max_new_tokens=6))
+    eng.run()
+    stats = eng.stats()
+    assert "plan_report" in stats  # at least one replan happened
+    assert stats["plan"]["chunk"] in pipeline.SERVE_CHUNK_SIZES
+    assert stats["stages"]["replan"]["calls"] >= 1
