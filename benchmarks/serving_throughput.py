@@ -1,19 +1,28 @@
 """Serving-throughput benchmark: scheduler-planned continuous batching vs
-the one-at-a-time admission path.
+the one-at-a-time admission path, plus the per-request policy columns.
 
 Same workload (N requests, fixed prompt length, fixed decode budget, same
-params), three engine policies through one code path — only the scheduler
-config changes:
+params), five engine policies through one code path — only the scheduler
+config and the per-request generation policy change:
 
   * ``serial``  — one request admitted and prefilled (B=1) per tick: the
     pre-scheduler engine's behaviour, kept as the baseline;
   * ``batched`` — all free slots admitted in one tick, one padded
     multi-sequence prefill call;
   * ``chunked`` — batched admission + chunked prefill interleaved with
-    decode (the default serving configuration).
+    decode (the default serving configuration);
+  * ``sampled`` — chunked, but every request samples with its own
+    temperature/top-p/seed (the non-greedy path: one extra batched
+    sampling dispatch per tick);
+  * ``mixed``   — chunked, but a quarter of the requests arrive
+    high-priority *after* the batch has settled into decode, so the
+    scheduler's priority admission + preemption + restore machinery is
+    actually on the clock (up-front mixed priorities would only be
+    sorted, never preempt).
 
-Emits end-to-end tokens/s per policy and the chunked-vs-serial speedup —
-the request-level analogue of Fig. 7's dataflow-restructuring claim.
+Emits end-to-end tokens/s per policy, the chunked-vs-serial speedup — the
+request-level analogue of Fig. 7's dataflow-restructuring claim — and the
+sampling/priority overheads vs plain chunked.
 """
 from __future__ import annotations
 
@@ -24,7 +33,8 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models.model import Model
-from repro.serving import Request, ServingEngine
+from repro.serving import (Request, SamplingParams, ServingEngine,
+                           settle_ticks)
 
 from .common import emit
 
@@ -36,17 +46,41 @@ MAX_NEW = 8
 MAX_LEN = 64
 CHUNK = 8
 
+#: policy name -> (prefill_mode, per-request sampling?, priority mix?)
+POLICIES: dict[str, tuple[str, bool, bool]] = {
+    "serial": ("serial", False, False),
+    "batched": ("batched", False, False),
+    "chunked": ("chunked", False, False),
+    "sampled": ("chunked", True, False),
+    "mixed": ("chunked", False, True),
+}
 
-def _serve(model, params, mode: str, cfg) -> tuple[float, dict]:
+
+def _serve(model, params, policy: str, cfg) -> tuple[float, dict]:
+    mode, sampled, mixed = POLICIES[policy]
     engine = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
                            prefill_mode=mode, chunk=CHUNK)
     rng = np.random.default_rng(0)
-    for rid in range(REQUESTS):
-        engine.submit(Request(
-            rid=rid,
-            prompt=rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
-            max_new_tokens=MAX_NEW))
+    reqs = [Request(
+        rid=rid,
+        prompt=rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
+        max_new_tokens=MAX_NEW,
+        sampling=SamplingParams(temperature=0.8, top_p=0.95, seed=rid)
+        if sampled else None,
+        priority=1 if mixed and rid >= REQUESTS - REQUESTS // 4 else 0)
+        for rid in range(REQUESTS)]
+    late = [r for r in reqs if r.priority > 0]  # empty except under mixed
     t0 = time.perf_counter()
+    for r in reqs:
+        if r.priority == 0:
+            engine.submit(r)
+    if late:
+        # let the batch settle into decode, then inject the VIPs so they
+        # preempt their way in instead of just sorting to the queue front
+        for _ in range(settle_ticks(PROMPT_LEN, CHUNK)):
+            engine.step()
+        for r in late:
+            engine.submit(r)
     engine.run()
     dt = time.perf_counter() - t0
     return dt, engine.stats()
@@ -58,21 +92,24 @@ def run() -> None:
     params = model.init(jax.random.key(0))
     total_tokens = REQUESTS * MAX_NEW
 
-    # one throwaway pass per mode so jit compilation is off the clock
-    for mode in ("serial", "batched", "chunked"):
-        _serve(model, params, mode, cfg)
+    # one throwaway pass per policy so jit compilation is off the clock
+    for policy in POLICIES:
+        _serve(model, params, policy, cfg)
 
     times = {}
-    for mode in ("serial", "batched", "chunked"):
-        dt, stats = _serve(model, params, mode, cfg)
-        times[mode] = dt
-        emit(f"serving.{ARCH}.{mode}", dt / total_tokens,
+    for policy in POLICIES:
+        dt, stats = _serve(model, params, policy, cfg)
+        times[policy] = dt
+        emit(f"serving.{ARCH}.{policy}", dt / total_tokens,
              f"tokens_per_s={total_tokens / dt:.1f};"
              f"decode_tokens_per_s={stats.get('decode_tokens_per_s', 0):.1f};"
-             f"chunk={stats['plan']['chunk']}")
+             f"chunk={stats['plan']['chunk']};"
+             f"preempted={stats['scheduler']['preempted']}")
     emit(f"serving.{ARCH}.takeaways", 0.0,
          f"batched_speedup_vs_serial={times['serial'] / times['batched']:.2f}x;"
-         f"chunked_speedup_vs_serial={times['serial'] / times['chunked']:.2f}x")
+         f"chunked_speedup_vs_serial={times['serial'] / times['chunked']:.2f}x;"
+         f"sampling_overhead_vs_chunked={times['sampled'] / times['chunked']:.2f}x;"
+         f"priority_overhead_vs_chunked={times['mixed'] / times['chunked']:.2f}x")
 
 
 if __name__ == "__main__":

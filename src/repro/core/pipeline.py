@@ -619,12 +619,16 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
       * ``queue_depth``      — requests waiting at plan time;
       * ``decode_step_s``    — observed mean batched-decode step time;
       * ``prefill_token_s``  — observed mean prefill time per prompt token;
+      * ``avg_prompt_len``   — observed mean admitted prompt length;
+      * ``can_chunk``        — whether the model supports chunked prefill
+        (attention-only families);
       * ``chunk_ratio``      — target chunk cost in decode-step units
         (default 4.0: one prefill chunk may stall decode by ~4 steps).
 
-    The plan (chunk size from ``SERVE_CHUNK_SIZES``, admission width, replan
-    period) is annotated on every node (``dataflow["serve_plan"]``) and
-    recorded in the report via ``ctx.artifacts``.
+    The plan — chunk size from ``SERVE_CHUNK_SIZES``, admission width,
+    per-tick preemption bound, ``batched``-vs-``chunked`` prefill mode,
+    replan period — is annotated on every node (``dataflow["serve_plan"]``)
+    and recorded in the report via ``ctx.artifacts``.
     """
     o = ctx.options
     slots = int(o.get("slots", 4))
@@ -632,6 +636,8 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     queue_depth = int(o.get("queue_depth", 0))
     decode_s = float(o.get("decode_step_s", 0.0))
     prefill_tok_s = float(o.get("prefill_token_s", 0.0))
+    avg_prompt = float(o.get("avg_prompt_len", 0.0))
+    can_chunk = bool(o.get("can_chunk", True))
     ratio = float(o.get("chunk_ratio", 4.0))
 
     if decode_s > 0.0 and prefill_tok_s > 0.0:
@@ -646,13 +652,43 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
         chunk = 32  # no stats yet: middle of the candidate set
     chunk = min(chunk, max_len)
 
+    # batched vs chunked prefill: a one-shot prefill of an average prompt
+    # stalls the whole decode batch for avg_prompt * prefill_token_s.  When
+    # that stall exceeds the chunk budget (`ratio` decode steps) the prompts
+    # are long enough that interleaved chunked prefill wins; short prompts
+    # take the lower-overhead one-shot path (chunk-granularity dispatch
+    # overhead dominates them — the CPU measurement that motivated this).
+    if not can_chunk:
+        mode = "batched"
+    elif decode_s > 0.0 and prefill_tok_s > 0.0 and avg_prompt > 0.0:
+        stall_steps = avg_prompt * prefill_tok_s / decode_s
+        mode = "chunked" if stall_steps > ratio else "batched"
+    else:
+        mode = "chunked"  # no stats yet: keep the interleaving default
+
+    # preemption bound: every eviction re-prefills the victim's context
+    # later, one chunk per tick — cap per-tick preemptions so that modeled
+    # restore traffic stays within one chunk budget (`ratio` decode steps).
+    if decode_s > 0.0 and prefill_tok_s > 0.0:
+        restore_steps = max(chunk * prefill_tok_s / decode_s, 1e-9)
+        preempt = int(min(max(slots - 1, 0), ratio / restore_steps))
+    else:
+        preempt = 1 if slots > 1 else 0
+
     plan = {
         "slots": slots,
         "chunk": chunk,
         # admission fills every free slot in one tick; under light load the
         # queue bounds it so the report shows what will actually happen
         "admit": slots if queue_depth == 0 else min(slots, queue_depth),
-        "replan_every": int(o.get("replan_every", 32)),
+        "preempt": preempt,
+        "prefill_mode": mode,
+        # without stats the rest of this plan is a guess: replan at half
+        # the requested period to re-measure sooner; with stats, keep the
+        # caller's cadence (steady-state replans are cache hits anyway)
+        "replan_every": int(o.get("replan_every", 32))
+                        if decode_s > 0.0 and prefill_tok_s > 0.0
+                        else max(1, int(o.get("replan_every", 32)) // 2),
         "modeled_chunk_cost_steps": round(chunk * prefill_tok_s / decode_s, 2)
                                     if decode_s > 0 else None,
     }
@@ -666,8 +702,9 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
 register_pass(Pass(
     name="serve_schedule",
     fn=_serve_schedule_fn,
-    description="Serving-schedule planning: stage stats -> slot/chunk plan "
-                "for the continuous-batching scheduler",
+    description="Serving-schedule planning: stage stats -> slot/chunk/"
+                "admit/preempt/prefill-mode plan for the continuous-"
+                "batching scheduler",
 ))
 
 

@@ -1,13 +1,19 @@
 """End-to-end serving driver: scheduler-planned continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-        --requests 8 --prompt-len 16 --max-new 12
+        --requests 8 --prompt-len 16 --max-new 12 \
+        --temperature 0.8 --top-p 0.95 --eos-id 7 --priority-mix 0,1
 
 Requests go through the scheduler subsystem (``repro.serving.scheduler``):
-batched admission, chunked prefill interleaved with decode, and the
-``serve_schedule`` pass re-planning the chunk budget from observed stage
-stats.  Exits nonzero when the batched decode loop produced no throughput —
-CI runs this as the serving smoke check.
+priority-then-FIFO batched admission (with bounded preemption), chunked
+prefill interleaved with decode, and the ``serve_schedule`` pass
+re-planning the chunk budget / prefill mode from observed stage stats.
+Each request carries its own SamplingParams (``--temperature 0`` is exact
+greedy; every request gets its own PRNG stream, seeded ``--seed + rid``).
+Throughput is computed from the tokens requests *actually* emitted — with
+``--eos-id`` set, a request may retire well before ``--max-new``.  Exits
+nonzero when the batched decode loop produced no throughput — CI runs this
+as the serving smoke check.
 """
 from __future__ import annotations
 
@@ -20,7 +26,8 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models.model import Model
-from repro.serving import Request, ServingEngine
+from repro.serving import (Request, SamplingParams, ServingEngine,
+                           settle_ticks)
 
 
 def main(argv=None):
@@ -35,10 +42,23 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--prefill-mode", default=None,
                     choices=[None, "chunked", "batched", "serial"],
-                    help="default: chunked for attention archs, batched "
-                         "for recurrent ones; serial is the pre-scheduler "
-                         "one-at-a-time baseline")
+                    help="default: auto (chunked for attention archs, "
+                         "batched for recurrent ones, then re-chosen by "
+                         "serve_schedule from observed stats); serial is "
+                         "the pre-scheduler one-at-a-time baseline")
     ap.add_argument("--replan-every", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax (the default policy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep the k most likely tokens (0 disables)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 disables)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="token id that retires a request early (<0 = none)")
+    ap.add_argument("--priority-mix", default="0",
+                    help="comma-separated priorities assigned round-robin "
+                         "to requests; higher admits first and may preempt "
+                         "lower DECODE slots (e.g. '0,0,0,1')")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -48,33 +68,64 @@ def main(argv=None):
     if cfg.is_encoder_decoder:
         raise SystemExit("serve.py drives decoder-only archs; for seamless "
                          "see examples/translate_audio.py")
+    priorities = [int(x) for x in args.priority_mix.split(",")]
     model = Model(cfg)
     params = model.init(jax.random.key(args.seed))
     engine = ServingEngine(model, params, slots=args.slots,
                            max_len=args.max_len, chunk=args.chunk,
+                           eos_id=args.eos_id,
                            prefill_mode=args.prefill_mode,
                            replan_every=args.replan_every)
     rng = np.random.default_rng(args.seed)
+    reqs = []
     for rid in range(args.requests):
-        engine.submit(Request(
+        reqs.append(Request(
             rid=rid,
             prompt=rng.integers(0, cfg.vocab, size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new,
+            sampling=SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k, top_p=args.top_p,
+                                    seed=args.seed + rid),
+            priority=priorities[rid % len(priorities)]))
+    # above-baseline priorities arrive *after* the batch settles into
+    # decode — submitted up-front they would merely sort to the queue
+    # head, and the preemption path the flag advertises would never run
+    base = min(priorities)
+    vips = [r for r in reqs if r.priority > base]
     t0 = time.time()
+    for r in reqs:
+        if r.priority == base:
+            engine.submit(r)
+    if vips:
+        for _ in range(settle_ticks(args.prompt_len, args.chunk)):
+            engine.step()
+        for r in vips:
+            engine.submit(r)
     engine.run()
     dt = time.time() - t0
     stats = engine.stats()
-    total_tokens = args.requests * args.max_new
+    # actual emission, not requests * max_new: EOS retires requests early
+    total_tokens = sum(len(r.generated) for r in reqs)
+    eos_stopped = sum(1 for r in reqs
+                      if args.eos_id >= 0 and r.generated
+                      and r.generated[-1] == args.eos_id)
     decode_tps = stats.get("decode_tokens_per_s", 0.0)
     print(f"served {args.requests} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s overall, "
           f"{decode_tps:.1f} tok/s batched decode)")
-    print(f"plan: {stats['plan']}")
+    print(f"policy: temperature={args.temperature} top_k={args.top_k} "
+          f"top_p={args.top_p} eos_id={args.eos_id} "
+          f"priorities={priorities}; {eos_stopped} requests stopped at EOS, "
+          f"{stats['scheduler']['preempted']} preemptions")
+    print(f"plan: {stats['plan']} (prefill_mode={stats['prefill_mode']})")
     for stage, s in stats["stages"].items():
         print(f"  stage {stage}: {s['calls']} calls, "
               f"mean {s['mean_s'] * 1e3:.2f} ms")
     if "plan_cache_hit" in stats:
         print(f"  serve_schedule replan cache_hit={stats['plan_cache_hit']}")
+    if not all(r.done for r in reqs):
+        print("FAIL: not every request completed", file=sys.stderr)
+        return 1
     if not decode_tps > 0:
         print("FAIL: batched decode produced no throughput", file=sys.stderr)
         return 1

@@ -1,7 +1,9 @@
-from .engine import Request, ServingEngine
+from .engine import Request, ServingEngine, settle_ticks
+from .sampling import GREEDY, SamplingParams, sample_tokens
 from .scheduler import (RequestState, ScheduledRequest, Scheduler,
                         SchedulerConfig, TickPlan, serve_plan_graph)
 
 __all__ = ["ServingEngine", "Request", "Scheduler", "SchedulerConfig",
            "RequestState", "ScheduledRequest", "TickPlan",
-           "serve_plan_graph"]
+           "serve_plan_graph", "SamplingParams", "GREEDY", "sample_tokens",
+           "settle_ticks"]

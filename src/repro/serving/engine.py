@@ -15,6 +15,13 @@ jitted dispatches:
   * **decode** — all DECODE slots step together (``serve_step``) with a
     ``live`` mask keeping bystander rows' caches untouched.
 
+Logits become tokens through one batched sampling dispatch
+(``repro.serving.sampling``): every slot applies its *own* request's
+:class:`SamplingParams` (temperature / top-k / top-p, per-request PRNG
+seed) with keys derived only from that request's seed and emitted-token
+count — so sampled output is independent of slot assignment and batch
+composition, and ``greedy`` is simply the temperature-0 default policy.
+
 The KV caches are the engine's state; every dispatch updates slot rows in
 place, so retire/refill never copies surviving requests.
 
@@ -27,6 +34,7 @@ PassReports read alike.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +42,7 @@ import numpy as np
 
 from repro.core.pipeline import StageTimer
 
+from .sampling import SamplingParams, sample_tokens
 from .scheduler import (RequestState, Scheduler, SchedulerConfig, TickPlan,
                         serve_plan_graph)
 
@@ -43,14 +52,26 @@ class Request:
     rid: int
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int = 16
+    #: per-request generation policy; None = the engine's default
+    sampling: SamplingParams | None = None
+    #: higher admits first and may preempt strictly-lower DECODE slots
+    priority: int = 0
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
 
 
+def settle_ticks(prompt_len: int, chunk: int) -> int:
+    """Ticks for a fresh admission wave to clear chunked prefill and settle
+    into decode.  Drivers that inject late high-priority work wait this
+    long first — preemption only means anything once the batch is
+    decoding (up-front submission would merely sort the queue)."""
+    return 2 * max(1, -(-prompt_len // max(chunk, 1))) + 1
+
+
 def _serving_jits(model, max_len: int) -> dict:
     """Jitted serving steps, cached **on the model**: every engine over the
-    same model shares one compiled prefill/chunk/decode/reset, so spinning
-    up an engine (benchmarks do it per policy) never recompiles."""
+    same model shares one compiled prefill/chunk/decode/reset/sample, so
+    spinning up an engine (benchmarks do it per policy) never recompiles."""
     cache = getattr(model, "_serving_jit_cache", None)
     if cache is None:
         cache = {}
@@ -65,6 +86,8 @@ def _serving_jits(model, max_len: int) -> dict:
                 lambda p, c, t, off, nn: model.prefill_chunk(p, c, t, off, nn)),
             "reset": jax.jit(
                 lambda c, rows: model.reset_cache_rows(c, rows)),
+            "sample": jax.jit(
+                functools.partial(sample_tokens, vocab=model.cfg.vocab)),
         }
     return cache[max_len]
 
@@ -72,6 +95,7 @@ def _serving_jits(model, max_len: int) -> dict:
 class ServingEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
                  eos_id: int = -1, greedy: bool = True,
+                 sampling: SamplingParams | None = None,
                  prefill_mode: str | None = None, chunk: int = 32,
                  replan_every: int = 32):
         self.model = model
@@ -80,13 +104,21 @@ class ServingEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.greedy = greedy
+        #: policy for requests that carry no SamplingParams of their own:
+        #: ``greedy=True`` is argmax (temperature 0); ``greedy=False``
+        #: samples the raw softmax (temperature 1).
+        if sampling is None:
+            sampling = SamplingParams() if greedy \
+                else SamplingParams(temperature=1.0)
+        self.default_sampling = sampling
         self.timer = StageTimer()
         self.tokens_out = 0        # every generated token (prefill + decode)
         self._decode_tokens = 0    # decode-loop tokens only (throughput)
         self._prefill_tokens = 0   # prompt tokens pushed through prefill
 
         cfg = model.cfg
-        if prefill_mode is None:
+        auto_mode = prefill_mode is None
+        if auto_mode:
             prefill_mode = "chunked" if cfg.attention_only else "batched"
         if prefill_mode == "chunked" and not cfg.attention_only:
             raise ValueError(f"{cfg.family} cannot run chunked prefill; "
@@ -99,6 +131,10 @@ class ServingEngine:
                 cfg.name, slots, cfg.d_model, cfg.d_ff or cfg.d_model,
                 cfg.vocab))
         self.scheduler.eos_id = None if eos_id < 0 else eos_id
+        self.scheduler.chunk_supported = cfg.attention_only
+        # a pinned mode stays pinned; auto engines let serve_schedule
+        # switch batched<->chunked from observed stats
+        self.scheduler.adopt_prefill_mode = auto_mode
 
         self.caches = model.init_caches(slots, max_len)
         self._last_tokens = jnp.zeros((slots, 1), jnp.int32)
@@ -107,10 +143,18 @@ class ServingEngine:
         self._prefill = jits["prefill"]
         self._chunk_step = jits["chunk"]
         self._reset_rows = jits["reset"]
+        self._sample_step = jits["sample"]
 
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.scheduler.submit(req)
+        sreq = self.scheduler.submit(req)
+        if req.sampling is None and not self.default_sampling.greedy:
+            # a non-greedy default must not make every request replay one
+            # PRNG stream: derive a per-request stream from the submission
+            # index (stable across batch layouts, unlike slot or tick)
+            req.sampling = dataclasses.replace(
+                self.default_sampling,
+                seed=self.default_sampling.seed + sreq.seq)
 
     def step(self) -> int:
         """One engine tick: execute the scheduler's plan.  Returns the
@@ -171,7 +215,7 @@ class ServingEngine:
         S = max(lens)
         toks = np.zeros((len(group), S), np.int32)
         for i, s in enumerate(group):
-            toks[i, :lens[i]] = s.req.prompt
+            toks[i, :lens[i]] = s.prompt_tokens
         batch = {"tokens": jnp.asarray(toks)}
         if padded:
             batch["lengths"] = jnp.asarray(lens, jnp.int32)
@@ -182,7 +226,7 @@ class ServingEngine:
         self.caches = jax.tree.map(
             lambda full, one: full.at[:, slots_arr].set(one),
             self.caches, fresh)
-        toks_out = self._pick(logits)
+        toks_out = self._sample(logits, group)
         for i, sreq in enumerate(group):
             t = int(toks_out[i])
             self._last_tokens = self._last_tokens.at[sreq.slot, 0].set(t)
@@ -196,15 +240,23 @@ class ServingEngine:
         toks = np.zeros((self.slots, C), np.int32)
         offsets = np.zeros((self.slots,), np.int32)
         n_new = np.zeros((self.slots,), np.int32)
+        rows: list = [None] * self.slots
         for a in plan.prefill:
-            toks[a.slot, :a.n_new] = a.sreq.req.prompt[a.start:a.start + a.n_new]
+            toks[a.slot, :a.n_new] = \
+                a.sreq.prompt_tokens[a.start:a.start + a.n_new]
             offsets[a.slot] = a.start
             n_new[a.slot] = a.n_new
+            rows[a.slot] = a.sreq
         logits, self.caches = self._chunk_step(
             self.params, self.caches, jnp.asarray(toks),
             jnp.asarray(offsets), jnp.asarray(n_new))
-        toks_out = self._pick(logits)
-        jax.block_until_ready(toks_out)
+        if any(a.start + a.n_new >= a.sreq.prompt_len for a in plan.prefill):
+            toks_out = self._sample(logits, rows)
+        else:
+            # no slot finishes its prompt this tick: the logits are dead,
+            # skip the sampling dispatch (but still sync for stage timing)
+            toks_out = None
+            jax.block_until_ready(logits)
         produced = 0
         for a in plan.prefill:
             self._prefill_tokens += a.n_new
@@ -221,13 +273,14 @@ class ServingEngine:
     # -- decode ---------------------------------------------------------------
     def _decode(self, plan: TickPlan) -> int:
         live = np.zeros((self.slots,), bool)
+        rows: list = [None] * self.slots
         for slot in plan.decode_slots:
             live[slot] = True
+            rows[slot] = self.scheduler.active[slot]
         logits, self.caches = self._serve(self.params, self.caches,
                                           self._last_tokens,
                                           jnp.asarray(live))
-        toks = self._pick(logits)
-        jax.block_until_ready(toks)
+        toks = self._sample(logits, rows)
         for slot in plan.decode_slots:
             t = int(toks[slot])
             self.tokens_out += 1
@@ -236,9 +289,37 @@ class ServingEngine:
             self.scheduler.note_decoded(slot, t)
         return len(plan.decode_slots)
 
-    def _pick(self, logits: jax.Array) -> jax.Array:
-        return jnp.argmax(logits[..., :self.model.cfg.vocab],
-                          axis=-1).astype(jnp.int32)
+    # -- sampling -------------------------------------------------------------
+    def _sample(self, logits: jax.Array, rows) -> np.ndarray:
+        """One batched sampling dispatch over ``(B, V)`` logits.  ``rows``
+        aligns each logits row with its ScheduledRequest (None = bystander
+        row, sampled under the default policy and discarded).  Each row's
+        key depends only on its request's seed and emitted-token count, so
+        results don't change with slot assignment or batch composition."""
+        B = int(logits.shape[0])
+        seeds = np.zeros((B,), np.uint32)
+        steps = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        ks = np.zeros((B,), np.int32)
+        ps = np.ones((B,), np.float32)
+        for i, sreq in enumerate(rows):
+            if sreq is None:
+                continue
+            sp = sreq.req.sampling or self.default_sampling
+            seeds[i] = np.uint32(sp.seed & 0xFFFFFFFF)
+            steps[i] = len(sreq.req.generated)
+            temps[i] = sp.temperature
+            ks[i] = sp.top_k
+            ps[i] = sp.top_p
+        if not temps.any():
+            # all-greedy batch: plain argmax, skip the sort/cumsum sampler
+            toks = jnp.argmax(logits[..., :self.model.cfg.vocab],
+                              axis=-1).astype(jnp.int32)
+            return np.asarray(jax.block_until_ready(toks))
+        toks = self._sample_step(logits, jnp.asarray(seeds),
+                                 jnp.asarray(steps), jnp.asarray(temps),
+                                 jnp.asarray(ks), jnp.asarray(ps))
+        return np.asarray(jax.block_until_ready(toks))
 
     # -- re-planning / stats --------------------------------------------------
     def _maybe_replan(self) -> None:
@@ -265,7 +346,8 @@ class ServingEngine:
         out = {"stages": self.timer.as_dict(), "tokens_out": self.tokens_out,
                "prefill_tokens": self._prefill_tokens,
                "plan": dict(self.scheduler.last_plan),
-               "scheduler": self.scheduler.state_counts()}
+               "scheduler": self.scheduler.state_counts(),
+               "prefill_mode": self.scheduler.cfg.prefill_mode}
         rep = self.scheduler.last_report
         if rep is not None:
             out["plan_report"] = rep.as_dict()

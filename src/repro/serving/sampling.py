@@ -1,0 +1,103 @@
+"""Per-request generation policy: temperature / top-k / top-p sampling.
+
+One :class:`SamplingParams` rides on every request; the engine executes the
+whole decode batch's policies as **one** batched jitted call over the
+``(slots, vocab)`` logits (:func:`sample_tokens`).  Two properties matter:
+
+* **batch independence** — every row draws with a PRNG key derived only
+  from its request's ``seed`` and how many tokens that request has emitted
+  (``jax.random.fold_in(jax.random.key(seed), step)``), never from the
+  slot index or the tick counter.  A request therefore samples the same
+  tokens no matter which slot it lands in or which other requests share
+  its batch — the serving analogue of the paper's point that restructured
+  dataflow must not change results;
+* **greedy is the temperature-0 special case** — ``temperature <= 0``
+  short-circuits to exact ``argmax``, so the engine's former `_pick` path
+  is this module with the default params, not separate code.
+
+Filtering order is the conventional temperature → top-k → top-p: logits
+are scaled, the k highest survive (0 disables), then the smallest prefix
+of the remaining distribution with mass ``>= top_p`` survives (1.0
+disables; the most-likely token always survives).  Per-row ``k``/``p``
+are *traced* values — the support masks are built with sort/cumsum
+thresholds instead of ``lax.top_k`` so one compiled sampler serves every
+mix of per-request policies in the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How one request turns logits into tokens.
+
+    The defaults are greedy decoding: ``temperature=0`` means exact argmax
+    and makes ``top_k``/``top_p``/``seed`` irrelevant.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0          # keep the k most likely tokens; 0 disables
+    top_p: float = 1.0      # keep the smallest set with mass >= p; 1 disables
+    seed: int = 0           # per-request PRNG stream (fold_in'd per token)
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+#: the engine's default policy — and the meaning of ``greedy=True``.
+GREEDY = SamplingParams()
+
+
+def _sample_one(row, seed, step, temperature, top_k, top_p):
+    """Sample one token from one ``(vocab,)`` logits row (vmapped below)."""
+    vocab = row.shape[-1]
+    greedy_tok = jnp.argmax(row)
+
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    x = row / safe_t
+    # top-k as a value threshold: the k-th largest scaled logit survives,
+    # anything below it is masked (ties at the threshold all survive).
+    kth = jnp.sort(x)[::-1][jnp.clip(top_k - 1, 0, vocab - 1)]
+    x = jnp.where((top_k <= 0) | (x >= kth), x, -jnp.inf)
+    # top-p (nucleus) as a probability threshold: walking the distribution
+    # in descending order, a token survives while the mass *before* it is
+    # still < p — so the most likely token always survives.
+    probs = jax.nn.softmax(x)
+    sp = jnp.sort(probs)[::-1]
+    keep = (jnp.cumsum(sp) - sp) < jnp.maximum(top_p, 1e-6)
+    thresh = jnp.min(jnp.where(keep, sp, jnp.inf))
+    x = jnp.where(probs >= thresh, x, -jnp.inf)
+
+    # the key depends only on (seed, step): batch-composition independent
+    key = jax.random.fold_in(jax.random.key(seed), step)
+    sampled = jax.random.categorical(key, x)
+    return jnp.where(temperature <= 0, greedy_tok, sampled).astype(jnp.int32)
+
+
+def sample_tokens(logits, seeds, steps, temperature, top_k, top_p, *,
+                  vocab: int):
+    """Batched per-row sampling: ``(B, V) -> (B,)`` int32 tokens.
+
+    ``seeds`` (uint32), ``steps`` (int32, tokens the row's request has
+    already emitted), ``temperature``/``top_p`` (float32) and ``top_k``
+    (int32) are all per-row ``(B,)`` arrays, so one jitted call executes a
+    batch of heterogeneous per-request policies.  ``vocab`` is the static
+    unpadded vocabulary size — logits beyond it (embedding padding) are
+    never sampled.
+    """
+    rows = logits[..., :vocab].astype(jnp.float32)
+    return jax.vmap(_sample_one)(rows, seeds, steps, temperature, top_k,
+                                 top_p)

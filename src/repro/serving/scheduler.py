@@ -4,21 +4,32 @@ The engine (``repro.serving.engine``) executes arrays; this module decides
 *what* to execute each tick.  It owns the request lifecycle
 
     WAITING ──admit──▶ PREFILL ──last chunk──▶ DECODE ──EOS/max──▶ RETIRED
+       ▲                                          │
+       └──────────────── preempt ─────────────────┘
 
 and produces a :class:`TickPlan` per engine tick: which waiting requests to
-admit into which free slots (FIFO, all free slots in one tick), which
-prefill-phase slots advance by how many prompt tokens (the chunked-prefill
-budget), and which slots decode.  The paper's thesis applied at the request
-level: instead of operator-at-a-time — request-at-a-time — execution, the
-scheduler restructures the request dataflow so prefill and decode share
-batched dispatches.
+admit into which free slots (priority-then-FIFO, all free slots in one
+tick), which prefill-phase slots advance by how many prompt tokens (the
+chunked-prefill budget), and which slots decode.  The paper's thesis
+applied at the request level: instead of operator-at-a-time — request-at-a-
+time — execution, the scheduler restructures the request dataflow so
+prefill and decode share batched dispatches.
 
-Plan *parameters* (chunk size, admission width, replan period) come from
-the ``serve_schedule`` pass registered in ``repro.core.pipeline``: the
-scheduler feeds its observed stage timings through ``pipeline.optimize``
-every ``replan_every`` ticks and applies the plan it gets back.  Timings
-are quantized to two significant digits first, so steady-state re-planning
-hits the pass-result cache and costs nothing.
+**Priorities and preemption.**  Admission orders the waiting queue by
+``(priority desc, submission order)``.  When the queue still holds a
+request of *strictly* higher priority than some DECODE-phase slot, that
+lowest-priority slot is preempted (bounded per tick by the plan's
+``preempt`` field): the victim re-enters the queue with ``pos`` reset, and
+its already-generated tokens become a prompt suffix
+(:attr:`ScheduledRequest.prompt_tokens`), so a later re-admission prefills
+the whole context back and the request continues exactly where it stopped.
+
+Plan *parameters* (chunk size, admission width, preemption bound, prefill
+mode, replan period) come from the ``serve_schedule`` pass registered in
+``repro.core.pipeline``: the scheduler feeds its observed stage timings
+through ``pipeline.optimize`` every ``replan_every`` ticks and adopts the
+plan it gets back.  Timings are quantized to two significant digits first,
+so steady-state re-planning hits the pass-result cache and costs nothing.
 """
 from __future__ import annotations
 
@@ -26,6 +37,8 @@ import dataclasses
 import enum
 from collections import deque
 from typing import Any
+
+import numpy as np
 
 
 class RequestState(enum.Enum):
@@ -44,10 +57,21 @@ class ScheduledRequest:
     slot: int | None = None
     pos: int = 0                     # prompt tokens prefilled so far
     seq: int = 0                     # submission order (FIFO evidence)
+    preemptions: int = 0             # times this request was evicted
+
+    @property
+    def prompt_tokens(self) -> np.ndarray:
+        """Tokens to prefill: the prompt plus — after a preemption — the
+        tokens already generated, so re-admission restores the context."""
+        prompt = np.asarray(self.req.prompt, np.int32)
+        if not self.req.generated:
+            return prompt
+        return np.concatenate(
+            [prompt, np.asarray(self.req.generated, np.int32)])
 
     @property
     def prompt_len(self) -> int:
-        return len(self.req.prompt)
+        return len(self.req.prompt) + len(self.req.generated)
 
     @property
     def prefill_done(self) -> bool:
@@ -91,6 +115,11 @@ class SchedulerConfig:
     replan_every: int = 32
     #: target prefill-chunk cost in decode-step units (serve_schedule input)
     chunk_ratio: float = 4.0
+    #: per-tick admission cap (None = every free slot); replaced by the
+    #: serve_schedule plan's ``admit`` after the first replan.
+    admit: int | None = None
+    #: per-tick preemption cap; replaced by the plan's ``preempt``.
+    preempt: int = 1
 
 
 def _quantize(x: float) -> float:
@@ -106,49 +135,112 @@ class Scheduler:
         if cfg.prefill_mode not in ("chunked", "batched", "serial"):
             raise ValueError(f"unknown prefill_mode {cfg.prefill_mode!r}")
         self.cfg = cfg
+        #: a caller-set admission cap is pinned; only a None (= every free
+        #: slot) cap is replaced by the serve_schedule plan's ``admit``
+        self._admit_pinned = cfg.admit is not None
+        # single-slot engines must never evict their only decoder (the
+        # serve_schedule pass encodes the same bound: preempt <= slots-1)
+        cfg.preempt = min(cfg.preempt, max(cfg.slots - 1, 0))
         self.eos_id: int | None = None  # engine sets this at construction
+        #: whether the model behind the engine supports chunked prefill
+        #: (attention-only families); gates prefill_mode adoption.
+        self.chunk_supported = cfg.prefill_mode == "chunked"
+        #: adopt the plan's batched-vs-chunked choice?  False when the
+        #: caller pinned a mode explicitly (benchmarks compare policies).
+        self.adopt_prefill_mode = False
         self.waiting: deque[ScheduledRequest] = deque()
+        self._waiting_dirty = False  # re-sort only after submit/preempt
         self.active: list[ScheduledRequest | None] = [None] * cfg.slots
         self.retired: list[ScheduledRequest] = []
+        self.preempted = 0               # total evictions (stats)
         self._seq = 0
         self._ticks = 0
+        self._prompt_tokens_admitted = 0  # avg_prompt_len replan input
+        self._admissions = 0
         #: proxy graph the serve_schedule pass plans over (hash-stable across
         #: replans — that is what makes repeated optimize() calls cache hits)
         self.plan_graph = plan_graph
         self.last_plan: dict[str, Any] = {
             "slots": cfg.slots, "chunk": cfg.chunk,
-            "admit": cfg.slots, "replan_every": cfg.replan_every}
+            "admit": cfg.admit or cfg.slots, "preempt": cfg.preempt,
+            "replan_every": cfg.replan_every,
+            "prefill_mode": cfg.prefill_mode}
         self.last_report = None
 
     # -- submission / admission ----------------------------------------------
     def submit(self, req) -> ScheduledRequest:
+        if len(req.prompt) == 0:
+            raise ValueError(
+                f"request {getattr(req, 'rid', '?')} has an empty prompt: "
+                "there is no position to sample a first token from")
         sreq = ScheduledRequest(req=req, seq=self._seq)
         self._seq += 1
         self.waiting.append(sreq)
+        self._waiting_dirty = True
         return sreq
 
     def free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.active) if s is None]
 
+    def _place(self, sreq: ScheduledRequest, slot: int,
+               plan: TickPlan) -> None:
+        sreq.slot = slot
+        sreq.state = RequestState.PREFILL
+        self.active[slot] = sreq
+        plan.admissions.append(sreq)
+
     def plan_tick(self) -> TickPlan:
         """Advance the FSM one tick and say what to execute.
 
-        Admission is FIFO and fills *every* free slot in one tick.  In
-        chunked mode admitted requests enter PREFILL and are immediately
-        part of this tick's chunk; in the one-shot modes the engine
-        prefills admissions directly to DECODE.
+        Admission is priority-then-FIFO and fills every free slot in one
+        tick (capped by the plan's ``admit``); a leftover waiting request of
+        strictly higher priority may then preempt the lowest-priority
+        DECODE slot (capped by ``preempt``).  In chunked mode admitted
+        requests enter PREFILL and are immediately part of this tick's
+        chunk; in the one-shot modes the engine prefills admissions
+        directly to DECODE.
         """
         self._ticks += 1
         plan = TickPlan()
-        budget = len(self.free_slots())
+        if self.waiting and self._waiting_dirty:
+            # zero-budget requests have nothing to generate: retire them
+            # here so they never occupy a slot (or emit a token: `_emit`)
+            live = [s for s in self.waiting if s.req.max_new_tokens > 0]
+            for s in self.waiting:
+                if s.req.max_new_tokens <= 0:
+                    self.retire(s)
+            self.waiting = deque(sorted(
+                live, key=lambda s: (-s.req.priority, s.seq)))
+            self._waiting_dirty = False
+        budget = min(len(self.free_slots()),
+                     self.cfg.admit or self.cfg.slots)
         while budget > 0 and self.waiting:
             sreq = self.waiting.popleft()
-            slot = self.free_slots()[0]
-            sreq.slot = slot
-            sreq.state = RequestState.PREFILL
-            self.active[slot] = sreq
-            plan.admissions.append(sreq)
+            self._place(sreq, self.free_slots()[0], plan)
+            self._prompt_tokens_admitted += sreq.prompt_len
+            self._admissions += 1
             budget -= 1
+
+        # preemption only makes sense when the admission cap left no slot
+        # empty: evicting a decoder while a free slot idles wastes its work
+        preempt_budget = self.cfg.preempt if not self.free_slots() else 0
+        while preempt_budget > 0 and self.waiting:
+            cand = self.waiting[0]
+            victims = [s for s in self.active if s is not None
+                       and s.state is RequestState.DECODE]
+            if not victims:
+                break
+            # evict the lowest priority; among equals, the newest arrival
+            victim = min(victims, key=lambda s: (s.req.priority, -s.seq))
+            if victim.req.priority >= cand.req.priority:
+                break
+            self.waiting.popleft()
+            slot = victim.slot
+            self._preempt(victim)
+            self._place(cand, slot, plan)
+            self._prompt_tokens_admitted += cand.prompt_len
+            self._admissions += 1
+            preempt_budget -= 1
 
         if self.cfg.prefill_mode == "chunked":
             for sreq in self.active:
@@ -162,11 +254,25 @@ class Scheduler:
                              and s.state is RequestState.DECODE]
         return plan
 
+    def _preempt(self, sreq: ScheduledRequest) -> None:
+        """Evict a DECODE request: back to WAITING with its generated tokens
+        folded into the prompt (`prompt_tokens`) so re-admission restores
+        the context by re-prefilling it.  Keeps its original `seq`, so among
+        equal priorities it re-admits before anything submitted later."""
+        self.active[sreq.slot] = None
+        sreq.slot = None
+        sreq.pos = 0
+        sreq.state = RequestState.WAITING
+        sreq.preemptions += 1
+        self.preempted += 1
+        self.waiting.append(sreq)
+        self._waiting_dirty = True
+
     # -- engine feedback ------------------------------------------------------
     def note_prefilled(self, sreq: ScheduledRequest, n_new: int,
                        first_token: int | None) -> None:
         """A chunk advanced ``sreq`` by ``n_new`` prompt tokens; when the
-        prompt is exhausted ``first_token`` (argmax at the last prompt
+        prompt is exhausted ``first_token`` (sampled at the last prompt
         position) moves the request to DECODE."""
         sreq.pos += n_new
         if not sreq.prefill_done:
@@ -188,6 +294,11 @@ class Scheduler:
         self._emit(sreq, token)
 
     def _emit(self, sreq: ScheduledRequest, token: int) -> None:
+        if len(sreq.req.generated) >= sreq.req.max_new_tokens:
+            # budget already exhausted (max_new_tokens == 0, or a stale
+            # in-flight token): drop the token instead of over-emitting
+            self.retire(sreq)
+            return
         sreq.req.generated.append(int(token))
         done = len(sreq.req.generated) >= sreq.req.max_new_tokens
         if self.eos_id is not None and int(token) == self.eos_id:
@@ -196,6 +307,8 @@ class Scheduler:
             self.retire(sreq)
 
     def retire(self, sreq: ScheduledRequest) -> None:
+        if sreq.state is RequestState.RETIRED:
+            return
         sreq.req.done = True
         sreq.state = RequestState.RETIRED
         if sreq.slot is not None:
@@ -209,15 +322,18 @@ class Scheduler:
     def maybe_replan(self, decode_step_s: float, prefill_token_s: float,
                      device=None) -> dict[str, Any] | None:
         """Every ``replan_every`` ticks: run the ``serve_schedule`` pass over
-        the proxy graph with quantized observed timings and adopt its plan.
-        Returns the plan on replan ticks, None otherwise."""
+        the proxy graph with quantized observed timings and adopt its plan —
+        chunk budget, admission width, preemption bound, replan period, and
+        (unless pinned) the batched-vs-chunked prefill mode.  Returns the
+        plan on replan ticks, None otherwise."""
         if self.plan_graph is None or self._ticks % self.cfg.replan_every:
             return None
         from repro.core import pipeline  # serving depends on core, not back
 
         # NOTE: no queue_depth here — it changes between replans and would
-        # defeat the optimize() result cache exactly when the queue is long;
-        # it only informs the report's "admit" field, which plan_tick ignores.
+        # defeat the optimize() result cache exactly when the queue is long.
+        avg_prompt = (self._prompt_tokens_admitted / self._admissions
+                      if self._admissions else 0.0)
         options = {
             "slots": self.cfg.slots,
             "max_len": self.cfg.max_len,
@@ -225,20 +341,47 @@ class Scheduler:
             "prefill_token_s": _quantize(prefill_token_s),
             "chunk_ratio": self.cfg.chunk_ratio,
             "replan_every": self.cfg.replan_every,
+            "avg_prompt_len": _quantize(avg_prompt),
+            "can_chunk": self.chunk_supported,
         }
         _, report = pipeline.optimize(self.plan_graph, device,
                                       passes=("serve_schedule",),
                                       options=options)
         plan = dict(report.passes[-1].summary)
+        # adopt the mode first: a batched->chunked switch must start with
+        # the planned chunk, not the stale constructor default
+        self._adopt_prefill_mode(plan.get("prefill_mode"))
         if self.cfg.prefill_mode == "chunked":
             self.cfg.chunk = int(plan["chunk"])
+        if not self._admit_pinned:
+            self.cfg.admit = max(1, int(plan.get("admit", self.cfg.slots)))
+        self.cfg.preempt = min(max(0, int(plan.get("preempt",
+                                                   self.cfg.preempt))),
+                               max(self.cfg.slots - 1, 0))
+        self.cfg.replan_every = max(1, int(plan.get("replan_every",
+                                                    self.cfg.replan_every)))
         self.last_plan = plan
         self.last_report = report
         return plan
 
+    def _adopt_prefill_mode(self, mode: str | None) -> None:
+        """Switch batched<->chunked when the plan says so — only if the mode
+        was not pinned, the model supports the target, and no request is
+        mid-prefill (a chunked->batched flip would strand its progress).
+        ``serial`` engines never switch: that mode exists to be measured."""
+        if (not self.adopt_prefill_mode
+                or mode not in ("chunked", "batched")
+                or mode == self.cfg.prefill_mode
+                or self.cfg.prefill_mode == "serial"
+                or (mode == "chunked" and not self.chunk_supported)
+                or any(s is not None and s.state is RequestState.PREFILL
+                       for s in self.active)):
+            return
+        self.cfg.prefill_mode = mode
+
     def state_counts(self) -> dict[str, int]:
         counts = {"waiting": len(self.waiting), "retired": len(self.retired),
-                  "prefill": 0, "decode": 0}
+                  "preempted": self.preempted, "prefill": 0, "decode": 0}
         for s in self.active:
             if s is not None:
                 counts[s.state.value] += 1

@@ -1,5 +1,6 @@
 """Scheduler subsystem: chunked-prefill equivalence, batch admission,
-FIFO fairness, retire/refill cache isolation, serve_schedule planning."""
+priority/preemption policy, FIFO fairness, retire/refill cache isolation,
+serve_schedule planning."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -90,9 +91,9 @@ def test_padded_prefill_rejected_for_recurrent_families():
 
 # -- scheduler policy (pure logic, no jax) ------------------------------------
 
-def _req(rid, n=8, max_new=4):
+def _req(rid, n=8, max_new=4, priority=0):
     return Request(rid=rid, prompt=np.zeros((n,), np.int32),
-                   max_new_tokens=max_new)
+                   max_new_tokens=max_new, priority=priority)
 
 
 def test_batch_admission_fills_all_free_slots_in_one_tick():
@@ -139,6 +140,112 @@ def test_fifo_admission_under_oversubscription():
     assert admitted == [0, 1, 2, 3, 4, 5]  # strict submission order
     assert [s.req.rid for s in sched.retired] == [0, 1, 2, 3, 4, 5]
     assert not sched.pending()
+
+
+def test_priority_admission_overtakes_fifo():
+    """Admission is priority-then-FIFO: a late high-priority submission is
+    admitted before earlier low-priority ones; FIFO breaks ties."""
+    sched = Scheduler(SchedulerConfig(slots=2, chunk=32))
+    for rid in range(4):
+        sched.submit(_req(rid, priority=0))
+    sched.submit(_req(9, priority=3))
+    plan = sched.plan_tick()
+    assert [s.req.rid for s in plan.admissions] == [9, 0]
+    assert [s.req.rid for s in sched.waiting] == [1, 2, 3]
+
+
+def test_preemption_evicts_lowest_priority_decode_slot():
+    sched = Scheduler(SchedulerConfig(slots=2, chunk=32))
+    for rid in range(2):
+        sched.submit(_req(rid, n=4, max_new=8, priority=rid))
+    plan = sched.plan_tick()
+    for a in plan.prefill:
+        sched.note_prefilled(a.sreq, a.n_new, first_token=1)
+    assert all(s.state is RequestState.DECODE for s in sched.active)
+
+    sched.submit(_req(5, n=4, max_new=2, priority=7))
+    plan = sched.plan_tick()
+    # rid 0 (priority 0) is the lowest-priority DECODE slot -> evicted
+    assert [s.req.rid for s in plan.admissions] == [5]
+    assert sched.preempted == 1
+    victim = next(s for s in sched.waiting if s.req.rid == 0)
+    assert victim.state is RequestState.WAITING and victim.slot is None
+    assert victim.pos == 0 and victim.preemptions == 1
+    # restore context = prompt + the token it already generated
+    assert victim.prompt_len == 5
+    np.testing.assert_array_equal(victim.prompt_tokens[-1:], [1])
+    # decode continues for the surviving higher-priority request only
+    assert len(plan.decode_slots) == 1
+    assert sched.active[plan.decode_slots[0]].req.rid == 1
+
+
+def test_preemption_respects_per_tick_bound_and_equal_priority():
+    sched = Scheduler(SchedulerConfig(slots=2, chunk=32, preempt=1))
+    for rid in range(2):
+        sched.submit(_req(rid, n=4, max_new=8, priority=1))
+    plan = sched.plan_tick()
+    for a in plan.prefill:
+        sched.note_prefilled(a.sreq, a.n_new, first_token=0)
+    # equal priority never preempts
+    sched.submit(_req(5, n=4, priority=1))
+    plan = sched.plan_tick()
+    assert plan.admissions == [] and sched.preempted == 0
+    # two higher-priority arrivals, but the per-tick bound allows one
+    sched.submit(_req(6, n=4, priority=5))
+    sched.submit(_req(7, n=4, priority=5))
+    plan = sched.plan_tick()
+    assert [s.req.rid for s in plan.admissions] == [6]
+    assert sched.preempted == 1
+    plan = sched.plan_tick()  # next tick evicts the next victim
+    assert [s.req.rid for s in plan.admissions] == [7]
+    assert sched.preempted == 2
+
+
+def test_no_preemption_while_a_free_slot_remains():
+    """An admission cap must not turn into needless eviction: as long as a
+    slot sits empty, a waiting VIP waits for it instead of preempting."""
+    sched = Scheduler(SchedulerConfig(slots=3, chunk=32, admit=1))
+    sreq = sched.submit(_req(0, n=4, max_new=8, priority=0))
+    plan = sched.plan_tick()
+    for a in plan.prefill:
+        sched.note_prefilled(a.sreq, a.n_new, first_token=0)
+    sched.submit(_req(1, n=4, priority=5))
+    sched.submit(_req(2, n=4, priority=5))
+    plan = sched.plan_tick()
+    # cap admits one VIP into a free slot; the other VIP waits (a free
+    # slot remains) rather than evicting the priority-0 decoder
+    assert [s.req.rid for s in plan.admissions] == [1]
+    assert sched.preempted == 0
+    assert sreq.state is RequestState.DECODE
+
+
+def test_zero_budget_request_retires_without_a_slot():
+    sched = Scheduler(SchedulerConfig(slots=1, chunk=32))
+    sched.submit(_req(0, max_new=0))
+    sched.submit(_req(1, max_new=2))
+    plan = sched.plan_tick()
+    assert [s.req.rid for s in plan.admissions] == [1]
+    assert [s.req.rid for s in sched.retired] == [0]
+    assert sched.retired[0].req.generated == []
+    assert sched.retired[0].req.done
+
+
+def test_emit_never_exceeds_token_budget():
+    sched = Scheduler(SchedulerConfig(slots=1, chunk=32))
+    sreq = sched.submit(_req(0, max_new=1))
+    sched.plan_tick()
+    sched.note_prefilled(sreq, 8, first_token=3)
+    assert sreq.req.generated == [3] and sreq.req.done
+    # a stale in-flight token after retirement must be dropped, not appended
+    sched._emit(sreq, 4)
+    assert sreq.req.generated == [3]
+    assert len(sched.retired) == 1  # and retirement stays idempotent
+
+
+def test_empty_prompt_rejected_at_submit():
+    sched = Scheduler(SchedulerConfig(slots=1))
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(rid=0, prompt=np.zeros((0,), np.int32)))
 
 
 # -- engine end-to-end --------------------------------------------------------
@@ -231,6 +338,100 @@ def test_scheduler_replan_adopts_plan_and_hits_cache():
     sched.plan_tick()
     sched.maybe_replan(decode_step_s=0.004002, prefill_token_s=0.00010004)
     assert sched.last_report.cache_hit
+
+
+def test_serve_schedule_plans_prefill_mode_and_preempt_bound():
+    g = serve_plan_graph("x", 4, 256, 512, 512)
+    base = {"slots": 4, "max_len": 128, "decode_step_s": 0.002,
+            "prefill_token_s": 0.0001, "chunk_ratio": 4.0}
+
+    def plan(**over):
+        _, rep = pipeline.optimize(g, passes=("serve_schedule",),
+                                   options={**base, **over})
+        return rep.passes[-1].summary
+
+    # long prompts: a one-shot prefill stalls decode > ratio steps -> chunked
+    long_p = plan(avg_prompt_len=200.0)
+    assert long_p["prefill_mode"] == "chunked"
+    # short prompts: the stall is cheap, one-shot batched wins
+    short_p = plan(avg_prompt_len=16.0)
+    assert short_p["prefill_mode"] == "batched"
+    # models that cannot chunk never get told to
+    assert plan(avg_prompt_len=200.0, can_chunk=False)["prefill_mode"] \
+        == "batched"
+    # preemption bound: bounded by slots-1, shrinks as prefill gets
+    # relatively more expensive (restoring an evicted context costs more)
+    cheap = plan(prefill_token_s=0.00001)
+    dear = plan(prefill_token_s=0.001)
+    assert 0 <= dear["preempt"] <= cheap["preempt"] <= 3
+    # no stats yet: conservative single-preemption default
+    assert plan(decode_step_s=0.0, prefill_token_s=0.0)["preempt"] == 1
+
+
+def test_scheduler_adopts_admit_preempt_and_replan_fields():
+    cfg = SchedulerConfig(slots=4, max_len=128, chunk=8, replan_every=1,
+                          preempt=3)
+    sched = Scheduler(cfg, plan_graph=serve_plan_graph("x", 4, 256, 512, 512))
+    sched.plan_tick()
+    plan = sched.maybe_replan(decode_step_s=0.004, prefill_token_s=0.0001)
+    # the plan's admit / preempt / replan_every are adopted, not dropped
+    assert sched.cfg.admit == plan["admit"]
+    assert sched.cfg.preempt == plan["preempt"]
+    assert sched.cfg.replan_every == plan["replan_every"]
+    # plan_tick honors the adopted admission cap
+    sched.cfg.admit = 2
+    for rid in range(6):
+        sched.submit(_req(rid))
+    assert len(sched.plan_tick().admissions) == 2
+
+
+def test_scheduler_prefill_mode_adoption_is_gated():
+    # short prompts (avg 8 tokens) + these stats model a cheap one-shot
+    # stall, so serve_schedule recommends "batched"
+    short = dict(decode_step_s=0.002, prefill_token_s=0.0001)
+
+    def mk(adopt, mode="chunked", can_chunk=True):
+        sched = Scheduler(
+            SchedulerConfig(slots=2, max_len=128, chunk=8, replan_every=1,
+                            prefill_mode=mode),
+            plan_graph=serve_plan_graph("x", 2, 256, 512, 512))
+        sched.adopt_prefill_mode = adopt
+        sched.chunk_supported = can_chunk
+        return sched
+
+    sched = mk(adopt=True)
+    sched.submit(_req(0, n=8, max_new=4))
+    plan = sched.plan_tick()  # rid 0 is mid-prefill: the switch must wait
+    sched.maybe_replan(**short)
+    assert sched.cfg.prefill_mode == "chunked"
+    # once nothing is mid-prefill, short prompts switch chunked -> batched
+    (a,) = plan.prefill
+    sched.note_prefilled(a.sreq, a.n_new, first_token=0)
+    sched.plan_tick()
+    sched.maybe_replan(**short)
+    assert sched.cfg.prefill_mode == "batched"
+
+    pinned = mk(adopt=False)
+    pinned.submit(_req(1, n=8, max_new=4))
+    (a,) = pinned.plan_tick().prefill
+    pinned.note_prefilled(a.sreq, a.n_new, first_token=0)
+    pinned.plan_tick()
+    pinned.maybe_replan(**short)
+    assert pinned.cfg.prefill_mode == "chunked"  # pinned modes stay pinned
+
+    serial = mk(adopt=True, mode="serial")
+    serial.submit(_req(2, n=8, max_new=4))
+    (sreq,) = serial.plan_tick().admissions
+    serial.note_admitted_prefilled(sreq, 0)
+    serial.plan_tick()
+    serial.maybe_replan(**short)
+    assert serial.cfg.prefill_mode == "serial"  # the baseline never switches
+
+    # defence in depth: even a plan saying "chunked" cannot switch a model
+    # that does not support chunked prefill
+    no_chunk = mk(adopt=True, mode="batched", can_chunk=False)
+    no_chunk._adopt_prefill_mode("chunked")
+    assert no_chunk.cfg.prefill_mode == "batched"
 
 
 def test_engine_replans_during_run(dense_model):
