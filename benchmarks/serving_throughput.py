@@ -18,11 +18,20 @@ config and the per-request generation policy change:
     high-priority *after* the batch has settled into decode, so the
     scheduler's priority admission + preemption + restore machinery is
     actually on the clock (up-front mixed priorities would only be
-    sorted, never preempt).
+    sorted, never preempt);
+  * ``paged``   — chunked, but the KV lives in a block pool
+    (``kv="paged"``): per-request block tables instead of dense
+    ``max_len`` rows, admission gated on free blocks;
+  * ``chunked_shared`` / ``paged_shared`` — the shared-prefix workload:
+    every request's prompt starts with the same 16 tokens.  The paged
+    column reports ``prefill_tokens_saved`` (> 0: later admissions map
+    the shared prefix to already-filled blocks and skip those chunks);
+    the dense engine re-prefills the prefix every time.
 
 Emits end-to-end tokens/s per policy, the chunked-vs-serial speedup — the
-request-level analogue of Fig. 7's dataflow-restructuring claim — and the
-sampling/priority overheads vs plain chunked.
+request-level analogue of Fig. 7's dataflow-restructuring claim — the
+sampling/priority overheads vs plain chunked, and the paged engine's
+prefill-token saving on the shared-prefix workload.
 """
 from __future__ import annotations
 
@@ -42,28 +51,42 @@ ARCH = "qwen3-1.7b"
 REQUESTS = 8
 SLOTS = 4
 PROMPT_LEN = 24
+SHARED_PREFIX = 16
 MAX_NEW = 8
 MAX_LEN = 64
 CHUNK = 8
+KV_BLOCK = 8
 
-#: policy name -> (prefill_mode, per-request sampling?, priority mix?)
-POLICIES: dict[str, tuple[str, bool, bool]] = {
-    "serial": ("serial", False, False),
-    "batched": ("batched", False, False),
-    "chunked": ("chunked", False, False),
-    "sampled": ("chunked", True, False),
-    "mixed": ("chunked", False, True),
+#: policy name -> (prefill_mode, per-request sampling?, priority mix?,
+#:                 kv layout, shared-prefix workload?)
+POLICIES: dict[str, tuple[str, bool, bool, str, bool]] = {
+    "serial": ("serial", False, False, "dense", False),
+    "batched": ("batched", False, False, "dense", False),
+    "chunked": ("chunked", False, False, "dense", False),
+    "sampled": ("chunked", True, False, "dense", False),
+    "mixed": ("chunked", False, True, "dense", False),
+    "paged": ("chunked", False, False, "paged", False),
+    "chunked_shared": ("chunked", False, False, "dense", True),
+    "paged_shared": ("chunked", False, False, "paged", True),
 }
 
 
 def _serve(model, params, policy: str, cfg) -> tuple[float, dict]:
-    mode, sampled, mixed = POLICIES[policy]
+    mode, sampled, mixed, kv, shared = POLICIES[policy]
     engine = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
-                           prefill_mode=mode, chunk=CHUNK)
+                           prefill_mode=mode, chunk=CHUNK, kv=kv,
+                           kv_block_size=KV_BLOCK if kv == "paged" else None)
     rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, SHARED_PREFIX).astype(np.int32) \
+        if shared else None
     reqs = [Request(
         rid=rid,
-        prompt=rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
+        prompt=np.concatenate(
+            [prefix,
+             rng.integers(0, cfg.vocab,
+                          PROMPT_LEN - SHARED_PREFIX).astype(np.int32)])
+        if shared else
+        rng.integers(0, cfg.vocab, PROMPT_LEN).astype(np.int32),
         max_new_tokens=MAX_NEW,
         sampling=SamplingParams(temperature=0.8, top_p=0.95, seed=rid)
         if sampled else None,
@@ -97,19 +120,26 @@ def run() -> None:
         _serve(model, params, policy, cfg)
 
     times = {}
+    saved = {}
     for policy in POLICIES:
         dt, stats = _serve(model, params, policy, cfg)
         times[policy] = dt
+        saved[policy] = stats.get("prefill_tokens_saved", 0)
         emit(f"serving.{ARCH}.{policy}", dt / total_tokens,
              f"tokens_per_s={total_tokens / dt:.1f};"
              f"decode_tokens_per_s={stats.get('decode_tokens_per_s', 0):.1f};"
              f"chunk={stats['plan']['chunk']};"
-             f"preempted={stats['scheduler']['preempted']}")
+             f"preempted={stats['scheduler']['preempted']};"
+             f"prefill_tokens_saved={saved[policy]}")
     emit(f"serving.{ARCH}.takeaways", 0.0,
          f"batched_speedup_vs_serial={times['serial'] / times['batched']:.2f}x;"
          f"chunked_speedup_vs_serial={times['serial'] / times['chunked']:.2f}x;"
          f"sampling_overhead_vs_chunked={times['sampled'] / times['chunked']:.2f}x;"
-         f"priority_overhead_vs_chunked={times['mixed'] / times['chunked']:.2f}x")
+         f"priority_overhead_vs_chunked={times['mixed'] / times['chunked']:.2f}x;"
+         f"paged_overhead_vs_chunked={times['paged'] / times['chunked']:.2f}x;"
+         f"paged_shared_prefill_tokens_saved={saved['paged_shared']};"
+         f"paged_shared_speedup_vs_dense_shared="
+         f"{times['chunked_shared'] / times['paged_shared']:.2f}x")
 
 
 if __name__ == "__main__":

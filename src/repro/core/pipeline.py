@@ -602,6 +602,49 @@ register_pass(Pass(
 #: so the engine's jitted chunk function compiles at most len(...) variants.
 SERVE_CHUNK_SIZES: tuple[int, ...] = (8, 16, 32, 64)
 
+#: KV block sizes the paged pool may be built with (same closed-set logic:
+#: each distinct block size is a distinct compiled pool shape).
+SERVE_KV_BLOCK_SIZES: tuple[int, ...] = (8, 16, 32)
+
+
+def _plan_kv_pool(slots: int, max_len: int, chunk: int,
+                  avg_prompt: float) -> dict[str, Any]:
+    """Size the paged KV pool from the prompt-length distribution.
+
+    * ``kv_block_size`` — largest candidate dividing ``max_len`` (the
+      block table must tile the horizon exactly — that equality is also
+      what keeps the paged gather's axis layout identical to the dense
+      ring buffer) that does not exceed half the average prompt: smaller
+      blocks waste less to fragmentation and share shorter prefixes, a
+      larger one keeps tables and gathers shallow.
+    * ``kv_pool_blocks`` — without stats, the dense-equivalent capacity
+      ``slots * max_len/bs`` (admission can then never be block-gated);
+      with stats, requests are modeled at twice their prompt length of
+      context, floored so one maximal request always fits.
+    """
+    divisors = [b for b in SERVE_KV_BLOCK_SIZES if max_len % b == 0]
+    if not divisors:
+        # no preferred size tiles this horizon: fall back to the largest
+        # power-of-two divisor (>=1 always exists), so planned defaults
+        # never hand the engine a block size it must reject
+        divisors = [next(b for b in (4, 2, 1) if max_len % b == 0)]
+    target = avg_prompt / 2 if avg_prompt > 0 else float(chunk)
+    fitting = [b for b in divisors if b <= max(target, divisors[0])]
+    bs = max(fitting) if fitting else divisors[0]
+    per_seq = -(-max_len // bs)
+    if avg_prompt > 0:
+        modeled = -(-int(min(max_len, 2 * avg_prompt)) // bs)
+        pool_blocks = max(per_seq, slots * modeled)
+    else:
+        pool_blocks = slots * per_seq
+    return {
+        "kv_block_size": bs,
+        "kv_pool_blocks": pool_blocks,
+        # fraction of the dense caches' KV slots the pool does not allocate
+        "kv_saving": round(max(0.0, 1.0 - pool_blocks * bs
+                                / (slots * max_len)), 4),
+    }
+
 
 def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     """Serving-schedule planning: StageTimer stats -> slot/chunk plan.
@@ -623,12 +666,18 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
       * ``can_chunk``        — whether the model supports chunked prefill
         (attention-only families);
       * ``chunk_ratio``      — target chunk cost in decode-step units
-        (default 4.0: one prefill chunk may stall decode by ~4 steps).
+        (default 4.0: one prefill chunk may stall decode by ~4 steps);
+      * ``kv``               — ``"dense"`` (default) or ``"paged"``: paged
+        engines additionally get ``kv_block_size`` / ``kv_pool_blocks``
+        sized from the prompt-length distribution (see
+        :func:`_plan_kv_pool`), and their prefill mode is pinned to
+        ``chunked`` (a block pool has no one-shot splice path).
 
     The plan — chunk size from ``SERVE_CHUNK_SIZES``, admission width,
     per-tick preemption bound, ``batched``-vs-``chunked`` prefill mode,
-    replan period — is annotated on every node (``dataflow["serve_plan"]``)
-    and recorded in the report via ``ctx.artifacts``.
+    replan period, and the paged-KV pool geometry — is annotated on every
+    node (``dataflow["serve_plan"]``) and recorded in the report via
+    ``ctx.artifacts``.
     """
     o = ctx.options
     slots = int(o.get("slots", 4))
@@ -652,13 +701,17 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
         chunk = 32  # no stats yet: middle of the candidate set
     chunk = min(chunk, max_len)
 
+    kv = str(o.get("kv", "dense"))
+
     # batched vs chunked prefill: a one-shot prefill of an average prompt
     # stalls the whole decode batch for avg_prompt * prefill_token_s.  When
     # that stall exceeds the chunk budget (`ratio` decode steps) the prompts
     # are long enough that interleaved chunked prefill wins; short prompts
     # take the lower-overhead one-shot path (chunk-granularity dispatch
     # overhead dominates them — the CPU measurement that motivated this).
-    if not can_chunk:
+    if kv == "paged":
+        mode = "chunked"  # a block pool prefills chunk-by-chunk only
+    elif not can_chunk:
         mode = "batched"
     elif decode_s > 0.0 and prefill_tok_s > 0.0 and avg_prompt > 0.0:
         stall_steps = avg_prompt * prefill_tok_s / decode_s
@@ -692,6 +745,9 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
         "modeled_chunk_cost_steps": round(chunk * prefill_tok_s / decode_s, 2)
                                     if decode_s > 0 else None,
     }
+    if kv == "paged":
+        plan["kv"] = kv
+        plan.update(_plan_kv_pool(slots, max_len, chunk, avg_prompt))
     out = g.clone()
     for node in out.nodes:
         node.dataflow["serve_plan"] = dict(plan)

@@ -51,6 +51,87 @@ def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, acc_ref, m_ref, l_ref):
                        ).astype(o_ref.dtype)
 
 
+def _paged_kernel(bt_ref, q_ref, k_ref, v_ref, valid_ref, o_ref,
+                  acc_ref, m_ref, l_ref):
+    """Same online-softmax body as `_kernel`, but the (innermost) grid axis
+    walks the request's *block table*: `bt_ref` is scalar-prefetched, so the
+    BlockSpec index maps below DMA the right physical pool block per step.
+    One pool block is one cache block — the paged gather never materializes
+    a per-request dense cache."""
+    m = pl.program_id(2)
+    nm = pl.num_programs(2)
+    q = q_ref[0, 0].astype(jnp.float32)         # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)      # (bs, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)      # (bs, D)
+    valid = valid_ref[0, 0]                     # (bs,)
+    D = q.shape[-1]
+
+    @pl.when(m == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) / np.sqrt(D)
+    s = jnp.where(valid[None, :], s, NEG_INF)   # (G, bs)
+    m_prev = m_ref[...]                         # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(m == nm - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def gqa_decode_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     block_tables: jax.Array, lengths: jax.Array, *,
+                     interpret: bool = True) -> jax.Array:
+    """Flash-decode over a block-paged KV pool.
+
+    q: (B, H, D); pools: (P, bs, K, D); block_tables: (B, M) int32 physical
+    block ids in logical order (-1 = unassigned); lengths: (B,) valid
+    context tokens.  Grid: (batch, kv_head, table_blocks) with the block
+    axis innermost carrying the online-softmax state; the scalar-prefetched
+    block table turns the grid step into the page gather.
+    """
+    B, H, D = q.shape
+    P, bs, K, _ = k_pool.shape
+    M = block_tables.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, D)
+    # unassigned entries gather block 0; masked off through `valid`
+    bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
+    valid = (jnp.arange(M * bs)[None, :] < lengths[:, None]).reshape(B, M, bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, M),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, k, m, bt: (b, k, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, k, m, bt: (bt[b, m], 0, k, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, k, m, bt: (bt[b, m], 0, k, 0)),
+            pl.BlockSpec((1, 1, bs), lambda b, k, m, bt: (b, m, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, k, m, bt: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        _paged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(bt, qg, k_pool, v_pool, valid)
+    return out.reshape(B, H, D)
+
+
 def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                valid: jax.Array, *, block_w: int = 1024,
                interpret: bool = True) -> jax.Array:

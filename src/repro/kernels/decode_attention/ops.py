@@ -6,6 +6,7 @@ import jax
 
 from .. import interpret_mode
 from .decode_attention import gqa_decode as _kernel_impl
+from .decode_attention import gqa_decode_paged as _paged_impl
 from .ref import gqa_decode_ref
 
 
@@ -16,3 +17,11 @@ def gqa_decode(q, k_cache, v_cache, valid, *, block_w: int = 1024):
         return gqa_decode_ref(q, k_cache, v_cache, valid)
     return _kernel_impl(q, k_cache, v_cache, valid, block_w=block_w,
                         interpret=interpret_mode())
+
+
+@jax.jit
+def gqa_decode_paged(q, k_pool, v_pool, block_tables, lengths):
+    """Paged flash-decode: the block table is scalar-prefetched so each
+    grid step DMAs one physical pool block (no dense gather)."""
+    return _paged_impl(q, k_pool, v_pool, block_tables, lengths,
+                       interpret=interpret_mode())

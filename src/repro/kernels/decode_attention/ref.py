@@ -16,3 +16,15 @@ def gqa_decode_ref(q, k_cache, v_cache, valid):
     w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bkgw,bwkd->bkgd", w, v_cache)
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def gqa_decode_paged_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Paged oracle: gather the pages into a dense per-request view, then
+    run the dense oracle with a length mask."""
+    B, M = block_tables.shape
+    bs = k_pool.shape[1]
+    bt = jnp.maximum(block_tables, 0)
+    k = k_pool[bt].reshape(B, M * bs, *k_pool.shape[2:])
+    v = v_pool[bt].reshape(B, M * bs, *v_pool.shape[2:])
+    valid = jnp.arange(M * bs)[None, :] < lengths[:, None]
+    return gqa_decode_ref(q, k, v, valid)

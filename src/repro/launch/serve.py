@@ -47,6 +47,18 @@ def main(argv=None):
                          "serve_schedule from observed stats); serial is "
                          "the pre-scheduler one-at-a-time baseline")
     ap.add_argument("--replan-every", type=int, default=32)
+    ap.add_argument("--kv", default="dense", choices=["dense", "paged"],
+                    help="KV cache layout: 'dense' pre-allocates max-len "
+                         "per slot; 'paged' allocates fixed-size blocks "
+                         "per request from a pool, with shared prompt "
+                         "prefixes mapped to the same blocks (requires "
+                         "chunked prefill on a full-attention arch)")
+    ap.add_argument("--kv-block-size", type=int, default=None,
+                    help="tokens per KV block (default: planned by the "
+                         "serve_schedule pass)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=None,
+                    help="physical blocks in the pool (default: planned; "
+                         "smaller pools gate admission on free blocks)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy argmax (the default policy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -71,11 +83,16 @@ def main(argv=None):
     priorities = [int(x) for x in args.priority_mix.split(",")]
     model = Model(cfg)
     params = model.init(jax.random.key(args.seed))
+    prefill_mode = args.prefill_mode
+    if args.kv == "paged" and prefill_mode is None:
+        prefill_mode = "chunked"  # the only mode a block pool can execute
     engine = ServingEngine(model, params, slots=args.slots,
                            max_len=args.max_len, chunk=args.chunk,
                            eos_id=args.eos_id,
-                           prefill_mode=args.prefill_mode,
-                           replan_every=args.replan_every)
+                           prefill_mode=prefill_mode,
+                           replan_every=args.replan_every,
+                           kv=args.kv, kv_block_size=args.kv_block_size,
+                           kv_pool_blocks=args.kv_pool_blocks)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for rid in range(args.requests):
@@ -117,7 +134,14 @@ def main(argv=None):
           f"top_p={args.top_p} eos_id={args.eos_id} "
           f"priorities={priorities}; {eos_stopped} requests stopped at EOS, "
           f"{stats['scheduler']['preempted']} preemptions")
-    print(f"plan: {stats['plan']} (prefill_mode={stats['prefill_mode']})")
+    print(f"plan: {stats['plan']} (prefill_mode={stats['prefill_mode']}, "
+          f"kv={stats['kv']})")
+    if "kv_pool" in stats:
+        kp = stats["kv_pool"]
+        print(f"kv pool: {kp['pool_blocks']} x {kp['block_size']}-token "
+              f"blocks, {kp['registered_prefixes']} cached prefixes, "
+              f"{kp['prefill_tokens_saved']} prefill tokens saved, "
+              f"{kp['gated_requests']} requests block-gated")
     for stage, s in stats["stages"].items():
         print(f"  stage {stage}: {s['calls']} calls, "
               f"mean {s['mean_s'] * 1e3:.2f} ms")

@@ -199,6 +199,40 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.reshape(B, H, D)
 
 
+def decode_attention_paged(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array,
+                           use_pallas: bool = False) -> jax.Array:
+    """One-token attention over a block-paged cache.
+
+    q: (B,H,D); pools: (P,bs,K,D); block_tables: (B,M) int32 physical block
+    ids in logical order (-1 = unassigned); lengths: (B,) context tokens.
+    The logical axis is ``M*bs`` wide with position ``p`` at index ``p`` —
+    the same layout (and therefore the same masked reductions) as the dense
+    ring buffer, which is what keeps paged and dense decode bit-identical.
+    """
+    if use_pallas:
+        from repro.kernels.decode_attention import ops as dec_ops
+        return dec_ops.gqa_decode_paged(q, k_pool, v_pool, block_tables,
+                                        lengths)
+    k, v = paged_kv_view(k_pool, v_pool, block_tables)
+    W = k.shape[1]
+    valid = jnp.arange(W)[None, :] < lengths[:, None]
+    return decode_attention(q, k, v, valid)
+
+
+def paged_kv_view(k_pool: jax.Array, v_pool: jax.Array,
+                  block_tables: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Gather a request-major dense view (B, M*bs, K, D) out of the pools.
+    Unassigned table entries (-1) gather block 0; callers mask by length."""
+    B, M = block_tables.shape
+    bs = k_pool.shape[1]
+    bt = jnp.maximum(block_tables, 0)
+    k = k_pool[bt].reshape(B, M * bs, *k_pool.shape[2:])
+    v = v_pool[bt].reshape(B, M * bs, *v_pool.shape[2:])
+    return k, v
+
+
 # ---------------------------------------------------------------------------
 # The attention block (projections + rope + cache handling)
 # ---------------------------------------------------------------------------
@@ -218,6 +252,33 @@ def init_kv_cache(batch: int, width: int, n_kv: int, head_dim: int,
         k=jnp.zeros((batch, width, n_kv, head_dim), dtype),
         v=jnp.zeros((batch, width, n_kv, head_dim), dtype),
         positions=jnp.full((batch, width), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+class PagedKVCache(NamedTuple):
+    """Block-paged KV cache: physical blocks + per-slot block tables.
+
+    The pool (``repro.serving.kv_pool.KVBlockPool``) owns the *allocation*
+    of blocks host-side; this pytree owns the *arrays*.  Position ``p`` of
+    slot ``b`` lives at ``(block_tables[b, p // bs], p % bs)``; block
+    tables are logical-order, so the gathered view reproduces the dense
+    cache's axis layout exactly (full attention only — a paged ring for
+    sliding windows is future work).
+    """
+    k: jax.Array             # (P, bs, K, D) physical pool
+    v: jax.Array             # (P, bs, K, D)
+    block_tables: jax.Array  # (B, M) int32, -1 = unassigned
+    length: jax.Array        # (B,) int32 context tokens cached
+
+
+def init_paged_kv_cache(batch: int, pool_blocks: int, block_size: int,
+                        max_blocks: int, n_kv: int, head_dim: int,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    return PagedKVCache(
+        k=jnp.zeros((pool_blocks, block_size, n_kv, head_dim), dtype),
+        v=jnp.zeros((pool_blocks, block_size, n_kv, head_dim), dtype),
+        block_tables=jnp.full((batch, max_blocks), -1, jnp.int32),
         length=jnp.zeros((batch,), jnp.int32),
     )
 
@@ -266,16 +327,23 @@ def attention_block(p: dict[str, jax.Array], x: jax.Array, *,
 def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
                            cache: KVCache, *, cfg,
                            cross_kv: tuple[jax.Array, jax.Array] | None = None,
-                           use_pallas: bool = False) -> tuple[jax.Array, KVCache]:
-    """One decode step.  x: (B, 1, d).  Updates the ring-buffer cache.
+                           use_pallas: bool = False,
+                           live: jax.Array | None = None
+                           ) -> tuple[jax.Array, KVCache]:
+    """One decode step.  x: (B, 1, d).  Updates the ring-buffer (or paged)
+    cache.
 
     RoPE is applied at *write* time (k cached post-rotation, standard decode
     practice): absolute-position rotation of both q and k preserves the
     relative property, so the ring buffer never needs re-rotation.
+
+    ``live`` ((B,) bool) only matters for a :class:`PagedKVCache`: dead
+    rows' pool writes are dropped and their lengths frozen (the dense path
+    lets the caller restore old rows wholesale instead — a paged pool is
+    shared across rows, so the mask must act at the scatter).
     """
     B, _, _ = x.shape
     hd = cfg.resolved_head_dim
-    W = cache.k.shape[1]
     pos = cache.length  # (B,) position of the new token
 
     q = _project(p, x, "wq")[:, 0]            # (B, H, D)
@@ -298,6 +366,13 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
         q = apply_rope(q[:, None], pos[:, None], inv)[:, 0]
         k_new = apply_rope(k_new[:, None], pos[:, None], inv)[:, 0]
 
+    if isinstance(cache, PagedKVCache):
+        y, new_cache = _paged_decode_write_attend(
+            q, k_new, v_new, cache, live=live, use_pallas=use_pallas)
+        return jnp.einsum("bhk,hkd->bd", y,
+                          p["wo"].astype(x.dtype))[:, None], new_cache
+
+    W = cache.k.shape[1]
     slot = (pos % W).astype(jnp.int32)         # ring-buffer write index
     bidx = jnp.arange(B)
     k_cache = cache.k.at[bidx, slot].set(k_new.astype(cache.k.dtype))
@@ -312,6 +387,39 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
                         length=cache.length + 1)
     y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
     return y[:, None], new_cache
+
+
+def _paged_decode_write_attend(q: jax.Array, k_new: jax.Array,
+                               v_new: jax.Array, cache: PagedKVCache, *,
+                               live: jax.Array | None,
+                               use_pallas: bool = False
+                               ) -> tuple[jax.Array, PagedKVCache]:
+    """Scatter one token's K/V into the pool and attend over the pages.
+
+    Live rows write at ``(block_tables[b, pos//bs], pos % bs)``; dead rows
+    route to an out-of-bounds block index and the scatter drops them
+    (``mode="drop"``), so bystanders never touch shared physical blocks.
+    """
+    B = q.shape[0]
+    P, bs = cache.k.shape[0], cache.k.shape[1]
+    M = cache.block_tables.shape[1]
+    pos = cache.length
+    if live is None:
+        live = jnp.ones((B,), bool)
+    bidx = jnp.arange(B)
+    blk = cache.block_tables[bidx, jnp.clip(pos // bs, 0, M - 1)]
+    ok = live & (blk >= 0) & (pos < M * bs)
+    safe_blk = jnp.where(ok, blk, P)           # P = out of bounds -> dropped
+    off = (pos % bs).astype(jnp.int32)
+    k_pool = cache.k.at[safe_blk, off].set(
+        k_new.astype(cache.k.dtype), mode="drop")
+    v_pool = cache.v.at[safe_blk, off].set(
+        v_new.astype(cache.v.dtype), mode="drop")
+    new_len = jnp.where(ok, pos + 1, pos).astype(jnp.int32)
+    out = decode_attention_paged(q, k_pool, v_pool, cache.block_tables,
+                                 new_len, use_pallas)
+    return out, PagedKVCache(k=k_pool, v=v_pool,
+                             block_tables=cache.block_tables, length=new_len)
 
 
 def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
@@ -362,6 +470,46 @@ def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
     return y, new_cache
 
 
+def _chunk_qkv(p: dict[str, jax.Array], x: jax.Array, *, cfg,
+               offsets: jax.Array):
+    """Shared chunk-prefill front half: q/k/v projections, qk-norm and
+    RoPE at the rows' absolute positions.  One body for the ring-buffer
+    and paged variants — the K/V bits a chunk writes must not depend on
+    which cache layout receives them."""
+    B, C, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = _project(p, x, "wq")                    # (B, C, H, D)
+    k_new = _project(p, x, "wk")                # (B, C, K, D)
+    v_new = _project(p, x, "wv")
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k_new = rms_norm(k_new, p["k_norm"])
+    pos = offsets[:, None] + jnp.arange(C)[None, :]          # (B, C)
+    if cfg.rope_fraction > 0:
+        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        q = apply_rope(q, pos, inv)
+        k_new = apply_rope(k_new, pos, inv)
+    return q, k_new, v_new, pos
+
+
+def _chunk_attend(p: dict[str, jax.Array], q: jax.Array, k_cache: jax.Array,
+                  v_cache: jax.Array, attend: jax.Array,
+                  dtype) -> jax.Array:
+    """Shared chunk-prefill back half: chunk queries over the whole
+    (just-updated) cache view, masked per row by ``attend`` (B, C, W),
+    then the output projection."""
+    B, C, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, C, K, G, hd)
+    s = jnp.einsum("bckgd,bwkd->bkgcw", qg, k_cache).astype(jnp.float32) \
+        / np.sqrt(hd)
+    s = jnp.where(attend[:, None, None, :, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgcw,bwkd->bckgd", w, v_cache).reshape(B, C, H, hd)
+    return jnp.einsum("bchk,hkd->bcd", out, p["wo"].astype(dtype))
+
+
 def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
                              cache: KVCache, *, cfg, offsets: jax.Array,
                              n_new: jax.Array) -> tuple[jax.Array, KVCache]:
@@ -379,19 +527,8 @@ def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
     stalling the whole batch behind a monolithic prefill.
     """
     B, C, _ = x.shape
-    hd = cfg.resolved_head_dim
     W = cache.k.shape[1]
-    q = _project(p, x, "wq")                    # (B, C, H, D)
-    k_new = _project(p, x, "wk")                # (B, C, K, D)
-    v_new = _project(p, x, "wv")
-    if cfg.qk_norm:
-        q = rms_norm(q, p["q_norm"])
-        k_new = rms_norm(k_new, p["k_norm"])
-    pos = offsets[:, None] + jnp.arange(C)[None, :]          # (B, C)
-    if cfg.rope_fraction > 0:
-        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
-        q = apply_rope(q, pos, inv)
-        k_new = apply_rope(k_new, pos, inv)
+    q, k_new, v_new, pos = _chunk_qkv(p, x, cfg=cfg, offsets=offsets)
 
     # masked ring-buffer write: padded/bystander entries write back the old
     # value, so the scatter is a no-op exactly where n_new says it must be
@@ -410,21 +547,60 @@ def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
     length = jnp.where(n_new > 0, offsets + n_new, cache.length) \
         .astype(jnp.int32)
 
-    # chunk queries over the whole (just-updated) cache, masked per slot
-    K = k_cache.shape[2]
-    G = q.shape[2] // K
-    qg = q.reshape(B, C, K, G, hd)
-    s = jnp.einsum("bckgd,bwkd->bkgcw", qg, k_cache).astype(jnp.float32) \
-        / np.sqrt(hd)
     attend = (positions[:, None, :] >= 0) \
         & (positions[:, None, :] <= pos[:, :, None])         # (B, C, W)
     if cfg.sliding_window:
         attend &= positions[:, None, :] > pos[:, :, None] - cfg.sliding_window
-    s = jnp.where(attend[:, None, None, :, :], s, NEG_INF)
-    w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
-    out = jnp.einsum("bkgcw,bwkd->bckgd", w, v_cache).reshape(
-        B, C, q.shape[2], hd)
+    y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype)
     new_cache = KVCache(k=k_cache, v=v_cache, positions=positions,
                         length=length)
-    y = jnp.einsum("bchk,hkd->bcd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def prefill_chunk_into_paged_cache(p: dict[str, jax.Array], x: jax.Array,
+                                   cache: PagedKVCache, *, cfg,
+                                   offsets: jax.Array, n_new: jax.Array
+                                   ) -> tuple[jax.Array, PagedKVCache]:
+    """Chunked prefill against a block-paged cache.
+
+    Same contract as :func:`prefill_chunk_into_cache` — x: (B, C, d)
+    right-padded chunk per row, ``offsets`` tokens already cached,
+    ``n_new`` valid tokens (0 = bystander, untouched) — but K/V land in
+    pool blocks through the row's block table instead of a private ring
+    row.  The chunk only ever writes *private* blocks: shared prefix
+    blocks sit below ``offsets`` by construction (the engine starts the
+    prefill at the shared-prefix boundary), and padded/bystander positions
+    scatter out of bounds and are dropped.  Masks reproduce the dense
+    function's exactly (position ``p`` at axis index ``p``), keeping the
+    paged engine bit-identical to the dense oracle.
+    """
+    B, C, _ = x.shape
+    P, bs = cache.k.shape[0], cache.k.shape[1]
+    M = cache.block_tables.shape[1]
+    q, k_new, v_new, pos = _chunk_qkv(p, x, cfg=cfg, offsets=offsets)
+
+    # block-table scatter: (row, chunk position) -> (physical block, offset)
+    valid_new = jnp.arange(C)[None, :] < n_new[:, None]      # (B, C)
+    blk = jnp.take_along_axis(cache.block_tables,
+                              jnp.clip(pos // bs, 0, M - 1), axis=1)
+    ok = valid_new & (blk >= 0) & (pos < M * bs)
+    safe_blk = jnp.where(ok, blk, P)           # P = out of bounds -> dropped
+    off = (pos % bs).astype(jnp.int32)
+    k_pool = cache.k.at[safe_blk, off].set(
+        k_new.astype(cache.k.dtype), mode="drop")
+    v_pool = cache.v.at[safe_blk, off].set(
+        v_new.astype(cache.v.dtype), mode="drop")
+    length = jnp.where(n_new > 0, offsets + n_new, cache.length) \
+        .astype(jnp.int32)
+
+    # chunk queries over the gathered page view, masked like the dense
+    # path: position k is attendable iff written (< the row's new length)
+    # and causally visible (<= the query's position)
+    k_cache, v_cache = paged_kv_view(k_pool, v_pool, cache.block_tables)
+    pos_k = jnp.arange(k_cache.shape[1])[None, None, :]      # (1, 1, W)
+    attend = (pos_k < length[:, None, None]) \
+        & (pos_k <= pos[:, :, None])                         # (B, C, W)
+    y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype)
+    new_cache = PagedKVCache(k=k_pool, v=v_pool,
+                             block_tables=cache.block_tables, length=length)
     return y, new_cache

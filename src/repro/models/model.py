@@ -174,6 +174,30 @@ class Model:
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
 
+    def init_paged_caches(self, batch: int, *, pool_blocks: int,
+                          block_size: int, max_blocks: int):
+        """Block-paged serving caches: one physical pool per layer plus
+        per-slot block tables (``repro.serving.kv_pool`` owns allocation).
+        Attention-only, full-attention families: a recurrent scan has no
+        pageable state and a sliding-window ring would need paged
+        wraparound (future work).
+        """
+        cfg = self.cfg
+        if not cfg.attention_only:
+            raise NotImplementedError(
+                f"paged KV needs attention-only layers, not {cfg.family}")
+        if cfg.sliding_window:
+            raise NotImplementedError(
+                "paged KV does not support sliding-window caches yet")
+        one = T.init_paged_layer_cache(cfg, batch, pool_blocks, block_size,
+                                       max_blocks, self.dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
+
+    @staticmethod
+    def _is_paged(caches) -> bool:
+        return isinstance(caches.kv, A.PagedKVCache)
+
     def prefill_step(self, params, batch, batch_axes=(), max_len: int = 0):
         """Run the prompt, return (last-position logits, populated caches).
 
@@ -280,6 +304,9 @@ class Model:
             raise NotImplementedError(
                 f"chunked prefill needs attention-only layers, not "
                 f"{cfg.family}")
+        paged = self._is_paged(caches)
+        chunk_fn = A.prefill_chunk_into_paged_cache if paged \
+            else A.prefill_chunk_into_cache
         B, C = tokens.shape
         x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
 
@@ -287,7 +314,7 @@ class Model:
             h = carry
             lp, cache = inp
             hn = rms_norm(h, lp["norm1"])
-            att, kv = A.prefill_chunk_into_cache(
+            att, kv = chunk_fn(
                 lp["attn"], hn, cache.kv, cfg=cfg, offsets=offsets,
                 n_new=n_new)
             h = h + att
@@ -317,14 +344,18 @@ class Model:
 
         ``live`` (B,) bool keeps non-live rows' caches untouched: slots that
         are empty or still prefilling share the batched decode dispatch
-        without their ring buffers advancing.
+        without their ring buffers advancing.  With paged caches the mask
+        acts at the pool scatter itself (a dense restore-by-row would also
+        roll back blocks another row legitimately wrote).
         """
         cfg = self.cfg
+        paged = self._is_paged(caches)
         x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
         x, new_caches = T.decoder_stack_decode(
             params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
-            batch_axes=batch_axes, use_pallas=self.use_pallas)
-        if live is not None:
+            batch_axes=batch_axes, use_pallas=self.use_pallas,
+            live=live if paged else None)
+        if live is not None and not paged:
             def keep(new, old):
                 m = live.reshape((1, live.shape[0]) + (1,) * (new.ndim - 2))
                 return jnp.where(m, new, old)

@@ -204,15 +204,28 @@ def init_layer_cache(cfg, batch: int, width: int, src_len: int = 0,
     return LayerCache(kv=kv, ssm=ssm, cross_k=ck, cross_v=cv)
 
 
+def init_paged_layer_cache(cfg, batch: int, pool_blocks: int,
+                           block_size: int, max_blocks: int,
+                           dtype=jnp.bfloat16) -> LayerCache:
+    """Per-layer cache backed by a block pool instead of per-slot rows.
+    Attention-only families (the pool carve-out mirrors chunked prefill)."""
+    kv = A.init_paged_kv_cache(batch, pool_blocks, block_size, max_blocks,
+                               cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+    return LayerCache(kv=kv)
+
+
 def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
-                         batch_axes=(), use_pallas: bool = False):
-    """One-token decode through one layer.  x: (B, 1, d)."""
+                         batch_axes=(), use_pallas: bool = False,
+                         live=None):
+    """One-token decode through one layer.  x: (B, 1, d).  ``live`` is
+    forwarded to the attention block for paged caches (dead rows must not
+    scatter into shared pool blocks); dense callers mask post hoc."""
     fam = cfg.family
     h = rms_norm(x, p["norm1"])
     new = cache
     if fam == "hybrid":
         att, kv = A.attention_decode_block(p["attn"], h, cache.kv, cfg=cfg,
-                                           use_pallas=use_pallas)
+                                           use_pallas=use_pallas, live=live)
         ssm_o, sc = S.mamba2_decode(p["ssm"], h, cache.ssm, cfg=cfg)
         x = x + 0.5 * (att * p["attn_scale"].astype(x.dtype)
                        + ssm_o * p["ssm_scale"].astype(x.dtype))
@@ -222,7 +235,7 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
         return x + y, new._replace(ssm=sc)
     else:
         att, kv = A.attention_decode_block(p["attn"], h, cache.kv, cfg=cfg,
-                                           use_pallas=use_pallas)
+                                           use_pallas=use_pallas, live=live)
         x = x + att
         new = new._replace(kv=kv)
     if cfg.is_encoder_decoder and not isinstance(cache.cross_k, tuple):
@@ -246,14 +259,14 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
 
 
 def decoder_stack_decode(stacked, x, caches, *, cfg, mesh=None, batch_axes=(),
-                         use_pallas: bool = False):
+                         use_pallas: bool = False, live=None):
     """caches: LayerCache pytree with a leading layer axis on every leaf."""
 
     def body(carry, inp):
         lp, cache = inp
         y, new_cache = decoder_layer_decode(lp, carry, cache, cfg=cfg,
                                             mesh=mesh, batch_axes=batch_axes,
-                                            use_pallas=use_pallas)
+                                            use_pallas=use_pallas, live=live)
         return y, new_cache
 
     x, new_caches = scan_or_unroll(body, x, (stacked, caches),

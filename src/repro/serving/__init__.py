@@ -1,4 +1,5 @@
 from .engine import Request, ServingEngine, settle_ticks
+from .kv_pool import KVBlockPool, PoolConfig, PoolError
 from .sampling import GREEDY, SamplingParams, sample_tokens
 from .scheduler import (RequestState, ScheduledRequest, Scheduler,
                         SchedulerConfig, TickPlan, serve_plan_graph)
@@ -6,4 +7,4 @@ from .scheduler import (RequestState, ScheduledRequest, Scheduler,
 __all__ = ["ServingEngine", "Request", "Scheduler", "SchedulerConfig",
            "RequestState", "ScheduledRequest", "TickPlan",
            "serve_plan_graph", "SamplingParams", "GREEDY", "sample_tokens",
-           "settle_ticks"]
+           "settle_ticks", "KVBlockPool", "PoolConfig", "PoolError"]

@@ -23,7 +23,14 @@ count — so sampled output is independent of slot assignment and batch
 composition, and ``greedy`` is simply the temperature-0 default policy.
 
 The KV caches are the engine's state; every dispatch updates slot rows in
-place, so retire/refill never copies surviving requests.
+place, so retire/refill never copies surviving requests.  With
+``kv="paged"`` the dense per-slot rows are replaced by a block pool
+(``repro.serving.kv_pool``): per-request block tables, refcounted
+shared-prefix blocks (admission probes a prefix cache and skips
+already-cached prefill chunks), and admission gated on free blocks.  The
+dense path remains the differential-testing oracle — the randomized
+serving-equivalence harness (``tests/test_serving_fuzz.py``) keeps the two
+bit-identical under greedy and seeded sampling.
 
 The engine shares the optimization pipeline's stage instrumentation
 (``repro.core.pipeline.StageTimer``): every stage is timed, and ``stats()``
@@ -42,6 +49,7 @@ import numpy as np
 
 from repro.core.pipeline import StageTimer
 
+from .kv_pool import KVBlockPool, PoolConfig
 from .sampling import SamplingParams, sample_tokens
 from .scheduler import (RequestState, Scheduler, SchedulerConfig, TickPlan,
                         serve_plan_graph)
@@ -97,13 +105,19 @@ class ServingEngine:
                  eos_id: int = -1, greedy: bool = True,
                  sampling: SamplingParams | None = None,
                  prefill_mode: str | None = None, chunk: int = 32,
-                 replan_every: int = 32):
+                 replan_every: int = 32, kv: str = "dense",
+                 kv_block_size: int | None = None,
+                 kv_pool_blocks: int | None = None):
+        if kv not in ("dense", "paged"):
+            raise ValueError(f"unknown kv mode {kv!r}; have dense|paged")
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
         self.greedy = greedy
+        self.kv = kv
+        self.pool: KVBlockPool | None = None
         #: policy for requests that carry no SamplingParams of their own:
         #: ``greedy=True`` is argmax (temperature 0); ``greedy=False``
         #: samples the raw softmax (temperature 1).
@@ -120,6 +134,18 @@ class ServingEngine:
         auto_mode = prefill_mode is None
         if auto_mode:
             prefill_mode = "chunked" if cfg.attention_only else "batched"
+        if kv == "paged":
+            # paged KV rides on chunked prefill (a block pool has no
+            # one-shot row-splice path) and needs pageable attention state
+            if not cfg.attention_only or cfg.sliding_window:
+                raise ValueError(
+                    f"kv='paged' needs a full-attention family, not "
+                    f"{cfg.family}"
+                    + (" with a sliding window" if cfg.sliding_window else ""))
+            if prefill_mode != "chunked":
+                raise ValueError(
+                    f"kv='paged' requires prefill_mode='chunked', "
+                    f"not {prefill_mode!r}")
         if prefill_mode == "chunked" and not cfg.attention_only:
             raise ValueError(f"{cfg.family} cannot run chunked prefill; "
                              f"use prefill_mode='batched'")
@@ -133,10 +159,14 @@ class ServingEngine:
         self.scheduler.eos_id = None if eos_id < 0 else eos_id
         self.scheduler.chunk_supported = cfg.attention_only
         # a pinned mode stays pinned; auto engines let serve_schedule
-        # switch batched<->chunked from observed stats
-        self.scheduler.adopt_prefill_mode = auto_mode
+        # switch batched<->chunked from observed stats (never paged ones:
+        # the pool cannot execute a one-shot batched prefill)
+        self.scheduler.adopt_prefill_mode = auto_mode and kv != "paged"
 
-        self.caches = model.init_caches(slots, max_len)
+        if kv == "paged":
+            self._init_paged_kv(kv_block_size, kv_pool_blocks)
+        else:
+            self.caches = model.init_caches(slots, max_len)
         self._last_tokens = jnp.zeros((slots, 1), jnp.int32)
         jits = _serving_jits(model, max_len)
         self._serve = jits["serve"]
@@ -145,8 +175,100 @@ class ServingEngine:
         self._reset_rows = jits["reset"]
         self._sample_step = jits["sample"]
 
+    # -- paged KV -------------------------------------------------------------
+    def _init_paged_kv(self, block_size: int | None,
+                       pool_blocks: int | None) -> None:
+        """Build the block pool.  Unset geometry comes from the
+        ``serve_schedule`` pass (the same planner the scheduler replans
+        through), which sizes ``block_size``/``pool_blocks`` from slots,
+        the KV horizon and — once stats exist — the prompt-length
+        distribution."""
+        if block_size is None or pool_blocks is None:
+            from repro.core import pipeline
+            _, report = pipeline.optimize(
+                self.scheduler.plan_graph,
+                passes=("serve_schedule",),
+                options={"slots": self.slots, "max_len": self.max_len,
+                         "kv": "paged", "can_chunk": True,
+                         "replan_every": self.scheduler.cfg.replan_every})
+            plan = report.passes[-1].summary
+            if block_size is None:
+                # clamp the planned block to the configured prefill chunk:
+                # a block larger than the chunk could never fill in one
+                # chunk, pushing prefix-cache hits out by a whole chunk
+                block_size = int(plan["kv_block_size"])
+                fitting = [b for b in pipeline.SERVE_KV_BLOCK_SIZES
+                           if self.max_len % b == 0
+                           and b <= max(self.scheduler.cfg.chunk, 8)]
+                if fitting:
+                    block_size = min(block_size, max(fitting))
+            if pool_blocks is None:
+                # size capacity from the *final* block size (construction
+                # has no prompt stats, so the planned capacity is always
+                # the dense-equivalent token budget) — taking the planner's
+                # count verbatim would over-allocate whenever the caller's
+                # block size differs from the planned one
+                pool_blocks = self.slots * (self.max_len // block_size)
+        if self.max_len % block_size:
+            raise ValueError(
+                f"max_len {self.max_len} is not a multiple of the KV block "
+                f"size {block_size}: the block table must tile the horizon "
+                "exactly (this is also what keeps paged and dense decode "
+                "bit-identical)")
+        max_blocks = self.max_len // block_size
+        self.pool = KVBlockPool(PoolConfig(
+            block_size=block_size, pool_blocks=pool_blocks,
+            max_blocks_per_seq=max_blocks))
+        self.caches = self.model.init_paged_caches(
+            self.slots, pool_blocks=pool_blocks, block_size=block_size,
+            max_blocks=max_blocks)
+        self.scheduler.kv_mode = "paged"
+        self.scheduler.kv_gate = self._kv_gate
+        self.scheduler.on_admit = self._kv_on_admit
+        self.scheduler.on_release = self._kv_on_release
+
+    def _kv_horizon(self, sreq) -> int:
+        """Context length the request may reach in this slot: its prefill
+        context plus the decode budget it still holds."""
+        remaining = max(sreq.req.max_new_tokens - len(sreq.req.generated), 0)
+        return min(sreq.prompt_len + remaining, self.max_len)
+
+    def _kv_gate(self, sreq, victim=None) -> bool:
+        """Admission gate: are there enough allocatable blocks (counting a
+        preemption victim's, when one is about to be evicted)?"""
+        ok = self.pool.can_admit(
+            sreq.prompt_tokens, self._kv_horizon(sreq),
+            victim_rid=victim.req.rid if victim is not None else None)
+        if not ok:
+            self.pool.gated_rids.add(sreq.req.rid)
+        return ok
+
+    def _kv_on_admit(self, sreq) -> None:
+        """Lease blocks and probe the prefix cache: ``cached`` tokens are
+        already present in shared blocks, so the prefill starts there —
+        those chunks are never dispatched at all."""
+        _, cached = self.pool.allocate(sreq.req.rid, sreq.prompt_tokens,
+                                       self._kv_horizon(sreq))
+        sreq.pos = cached
+
+    def _kv_on_release(self, sreq) -> None:
+        if self.pool.holds(sreq.req.rid):  # zero-budget retires never leased
+            self.pool.free(sreq.req.rid)
+
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if self.pool is not None \
+                and len(req.prompt) + req.max_new_tokens > self.max_len:
+            # the paged horizon is exact: a context past max_len has no
+            # block to land in (the dense ring wraps instead — garbage,
+            # but its long-standing behaviour).  Enforcing prompt+max_new
+            # here also keeps a preemption restore's folded context
+            # (prompt + generated, plus the remaining budget) inside the
+            # horizon for every later re-admission.
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds the "
+                f"{self.max_len}-token KV horizon of the paged pool")
         sreq = self.scheduler.submit(req)
         if req.sampling is None and not self.default_sampling.greedy:
             # a non-greedy default must not make every request replay one
@@ -184,9 +306,22 @@ class ServingEngine:
     # -- admission ------------------------------------------------------------
     def _admit(self, plan: TickPlan) -> None:
         if self.scheduler.cfg.prefill_mode == "chunked":
-            # recycle the admitted rows so the first chunk sees an empty
-            # ring buffer; one-shot modes skip this — their splice below
-            # overwrites every cache leaf of those rows anyway
+            if self.pool is not None:
+                # paged: point the admitted slots' block tables at their
+                # freshly leased blocks; length starts at the prefix-cache
+                # hit (those positions are already in shared blocks)
+                kv = self.caches.kv
+                bt, ln = kv.block_tables, kv.length
+                for sreq in plan.admissions:
+                    row = jnp.asarray(self.pool.block_table(sreq.req.rid))
+                    bt = bt.at[:, sreq.slot].set(row)
+                    ln = ln.at[:, sreq.slot].set(sreq.pos)
+                self.caches = self.caches._replace(
+                    kv=kv._replace(block_tables=bt, length=ln))
+                return
+            # dense: recycle the admitted rows so the first chunk sees an
+            # empty ring buffer; one-shot modes skip this — their splice
+            # below overwrites every cache leaf of those rows anyway
             rows = np.zeros((self.slots,), bool)
             for sreq in plan.admissions:
                 rows[sreq.slot] = True
@@ -262,6 +397,11 @@ class ServingEngine:
             self._prefill_tokens += a.n_new
             done = a.start + a.n_new >= a.sreq.prompt_len
             first = int(toks_out[a.slot]) if done else None
+            if self.pool is not None:
+                # register freshly *full* prefill blocks in the prefix
+                # cache (before note_prefilled: its _emit may retire the
+                # request and release the lease in the same call)
+                self.pool.note_prefilled(a.sreq.req.rid, a.start + a.n_new)
             if done:
                 self._last_tokens = \
                     self._last_tokens.at[a.slot, 0].set(first)
@@ -347,7 +487,11 @@ class ServingEngine:
                "prefill_tokens": self._prefill_tokens,
                "plan": dict(self.scheduler.last_plan),
                "scheduler": self.scheduler.state_counts(),
-               "prefill_mode": self.scheduler.cfg.prefill_mode}
+               "prefill_mode": self.scheduler.cfg.prefill_mode,
+               "kv": self.kv}
+        if self.pool is not None:
+            out["kv_pool"] = self.pool.stats()
+            out["prefill_tokens_saved"] = self.pool.tokens_saved
         rep = self.scheduler.last_report
         if rep is not None:
             out["plan_report"] = rep.as_dict()

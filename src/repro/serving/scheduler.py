@@ -148,6 +148,18 @@ class Scheduler:
         #: adopt the plan's batched-vs-chunked choice?  False when the
         #: caller pinned a mode explicitly (benchmarks compare policies).
         self.adopt_prefill_mode = False
+        #: "dense" or "paged" — forwarded to the serve_schedule pass so a
+        #: paged engine's replans keep the kv pool fields in the plan.
+        self.kv_mode = "dense"
+        #: paged-KV hooks, set by the engine when it runs a block pool:
+        #: ``kv_gate(sreq, victim=None)`` — may this request be admitted
+        #: given free blocks (counting the victim's, when preempting)?;
+        #: ``on_admit(sreq)`` — lease blocks and apply the prefix-cache
+        #: probe (may advance ``sreq.pos`` past already-cached chunks);
+        #: ``on_release(sreq)`` — drop the lease at retire/preempt.
+        self.kv_gate = None
+        self.on_admit = None
+        self.on_release = None
         self.waiting: deque[ScheduledRequest] = deque()
         self._waiting_dirty = False  # re-sort only after submit/preempt
         self.active: list[ScheduledRequest | None] = [None] * cfg.slots
@@ -187,6 +199,10 @@ class Scheduler:
         sreq.slot = slot
         sreq.state = RequestState.PREFILL
         self.active[slot] = sreq
+        if self.on_admit is not None:
+            # paged KV: lease blocks now, so this tick's chunk plan (built
+            # below from sreq.pos) already skips prefix-cached chunks
+            self.on_admit(sreq)
         plan.admissions.append(sreq)
 
     def plan_tick(self) -> TickPlan:
@@ -215,7 +231,11 @@ class Scheduler:
         budget = min(len(self.free_slots()),
                      self.cfg.admit or self.cfg.slots)
         while budget > 0 and self.waiting:
-            sreq = self.waiting.popleft()
+            sreq = self.waiting[0]
+            if self.kv_gate is not None and not self.kv_gate(sreq):
+                break  # no KV blocks for the queue head: admission stays
+                       # FIFO — it waits for a retirement to free blocks
+            self.waiting.popleft()
             self._place(sreq, self.free_slots()[0], plan)
             self._prompt_tokens_admitted += sreq.prompt_len
             self._admissions += 1
@@ -229,11 +249,23 @@ class Scheduler:
             victims = [s for s in self.active if s is not None
                        and s.state is RequestState.DECODE]
             if not victims:
+                # a VIP must not wait behind a wall of long prefills:
+                # mid-chunked-prefill slots are eviction candidates too
+                # (their consumed chunk budget is recomputed — reset to
+                # zero — by _preempt, so re-admission prefills cleanly).
+                # A slot admitted *this* tick can never qualify: admission
+                # is priority-ordered, so its priority >= cand's.
+                victims = [s for s in self.active if s is not None
+                           and s.state is RequestState.PREFILL]
+            if not victims:
                 break
             # evict the lowest priority; among equals, the newest arrival
             victim = min(victims, key=lambda s: (s.req.priority, -s.seq))
             if victim.req.priority >= cand.req.priority:
                 break
+            if self.kv_gate is not None and \
+                    not self.kv_gate(cand, victim=victim):
+                break  # even the victim's blocks would not make cand fit
             self.waiting.popleft()
             slot = victim.slot
             self._preempt(victim)
@@ -255,16 +287,26 @@ class Scheduler:
         return plan
 
     def _preempt(self, sreq: ScheduledRequest) -> None:
-        """Evict a DECODE request: back to WAITING with its generated tokens
-        folded into the prompt (`prompt_tokens`) so re-admission restores
-        the context by re-prefilling it.  Keeps its original `seq`, so among
-        equal priorities it re-admits before anything submitted later."""
+        """Evict a DECODE (or mid-prefill) request: back to WAITING with its
+        generated tokens folded into the prompt (`prompt_tokens`) so
+        re-admission restores the context by re-prefilling it.  Keeps its
+        original `seq`, so among equal priorities it re-admits before
+        anything submitted later.
+
+        ``pos = 0`` is the chunk-budget recompute: a mid-chunked-prefill
+        victim has consumed part of its budget (pos chunk tokens) but zero
+        generated tokens — carrying that pos into the next admission would
+        make the restore skip the evicted tokens' re-prefill and decode
+        from a hole in the cache.  Eviction always restarts the prefill
+        (the paged engine's prefix cache is what makes that cheap)."""
         self.active[sreq.slot] = None
         sreq.slot = None
         sreq.pos = 0
         sreq.state = RequestState.WAITING
         sreq.preemptions += 1
         self.preempted += 1
+        if self.on_release is not None:
+            self.on_release(sreq)
         self.waiting.append(sreq)
         self._waiting_dirty = True
 
@@ -313,6 +355,8 @@ class Scheduler:
         sreq.state = RequestState.RETIRED
         if sreq.slot is not None:
             self.active[sreq.slot] = None
+        if self.on_release is not None:
+            self.on_release(sreq)  # paged KV: drop the block lease
         self.retired.append(sreq)
 
     def pending(self) -> bool:
@@ -344,6 +388,8 @@ class Scheduler:
             "avg_prompt_len": _quantize(avg_prompt),
             "can_chunk": self.chunk_supported,
         }
+        if self.kv_mode != "dense":
+            options["kv"] = self.kv_mode
         _, report = pipeline.optimize(self.plan_graph, device,
                                       passes=("serve_schedule",),
                                       options=options)

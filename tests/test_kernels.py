@@ -88,6 +88,58 @@ def test_linked_matmul_property(m, ff, d, seed):
                                rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("B,H,K,D,bs,M", [
+    (1, 4, 1, 64, 16, 4), (2, 8, 2, 64, 8, 8),
+    (2, 8, 8, 128, 32, 2), (3, 16, 4, 32, 8, 4)])
+def test_gqa_decode_paged_sweep(B, H, K, D, bs, M):
+    """Paged flash-decode (scalar-prefetched block tables) vs the gather
+    oracle, across GQA group counts H/K and page geometries."""
+    P = B * M + 3
+    q = _arr((B, H, D))
+    kp, vp = _arr((P, bs, K, D)), _arr((P, bs, K, D))
+    perm = RNG.permutation(P)
+    bt = np.full((B, M), -1, np.int32)
+    lengths = np.asarray(
+        [int(RNG.integers(1, M * bs + 1)) for _ in range(B)], np.int32)
+    idx = 0
+    for b in range(B):
+        for m in range(-(-int(lengths[b]) // bs)):
+            bt[b, m] = perm[idx]
+            idx += 1
+    out = da_ops.gqa_decode_paged(q, kp, vp, jnp.asarray(bt),
+                                  jnp.asarray(lengths))
+    ref = da_ref.gqa_decode_paged_ref(q, kp, vp, jnp.asarray(bt),
+                                      jnp.asarray(lengths))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@given(bs=st.sampled_from([8, 16]), m=st.sampled_from([2, 4]),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=10, deadline=None)
+def test_gqa_decode_paged_property_vs_dense_gather(bs, m, seed):
+    """For any block table and length, the paged kernel must equal the
+    *dense* kernel run on the gathered cache with a length mask — the
+    page indirection cannot change the math."""
+    r = np.random.default_rng(seed)
+    B, H, K, D = 2, 4, 2, 32
+    P = B * m + 2
+    q = jnp.asarray(r.normal(size=(B, H, D)), jnp.float32)
+    kp = jnp.asarray(r.normal(size=(P, bs, K, D)), jnp.float32)
+    vp = jnp.asarray(r.normal(size=(P, bs, K, D)), jnp.float32)
+    perm = r.permutation(P)
+    bt = perm[:B * m].reshape(B, m).astype(np.int32)
+    lengths = r.integers(1, m * bs + 1, size=(B,)).astype(np.int32)
+    out = da_ops.gqa_decode_paged(q, kp, vp, jnp.asarray(bt),
+                                  jnp.asarray(lengths))
+    gathered_k = kp[bt].reshape(B, m * bs, K, D)
+    gathered_v = vp[bt].reshape(B, m * bs, K, D)
+    valid = jnp.arange(m * bs)[None, :] < jnp.asarray(lengths)[:, None]
+    dense = da_ops.gqa_decode(q, gathered_k, gathered_v, valid, block_w=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=3e-5, atol=3e-5)
+
+
 @given(w=st.sampled_from([128, 256, 512]), frac=st.floats(0.05, 1.0),
        seed=st.integers(0, 2**16))
 @settings(max_examples=10, deadline=None)

@@ -1,0 +1,225 @@
+"""KVBlockPool invariants: free-list/refcount accounting, prefix-cache
+sharing and collision fallback, cached-free revival and eviction, admission
+gating.  Pure host-side bookkeeping — no jax."""
+import numpy as np
+import pytest
+
+from repro.serving import kv_pool
+from repro.serving.kv_pool import KVBlockPool, PoolConfig, PoolError
+
+
+def _pool(bs=4, blocks=16, max_blocks=8):
+    return KVBlockPool(PoolConfig(block_size=bs, pool_blocks=blocks,
+                                  max_blocks_per_seq=max_blocks))
+
+
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        PoolConfig(block_size=0)
+    with pytest.raises(ValueError):
+        PoolConfig(block_size=4, pool_blocks=2, max_blocks_per_seq=4)
+
+
+def test_allocate_free_roundtrip_accounting():
+    p = _pool()
+    ids, cached = p.allocate(0, _toks(*range(10)), horizon=14)
+    assert cached == 0
+    assert len(ids) == p.blocks_for(14) == 4
+    assert p.available() == 12
+    p.check_invariants()
+    p.free(0)
+    assert p.available() == 16
+    p.check_invariants()
+
+
+def test_double_free_raises():
+    p = _pool()
+    p.allocate(0, _toks(1, 2, 3), horizon=3)
+    p.free(0)
+    with pytest.raises(PoolError, match="double free"):
+        p.free(0)
+    with pytest.raises(PoolError, match="double free"):
+        p.free(99)  # never allocated
+    p.check_invariants()
+
+
+def test_duplicate_lease_rejected():
+    p = _pool()
+    p.allocate(0, _toks(1, 2, 3), horizon=3)
+    with pytest.raises(PoolError, match="already holds"):
+        p.allocate(0, _toks(1, 2, 3), horizon=3)
+
+
+def test_horizon_must_cover_prefill_context():
+    p = _pool()
+    with pytest.raises(PoolError, match="horizon"):
+        p.allocate(0, _toks(*range(8)), horizon=4)
+
+
+def test_over_wide_request_rejected():
+    p = _pool(bs=4, blocks=16, max_blocks=2)
+    with pytest.raises(PoolError, match="block table"):
+        p.allocate(0, _toks(*range(4)), horizon=12)  # 3 blocks > 2
+
+
+def test_prefix_sharing_and_refcounts():
+    p = _pool(bs=4)
+    prompt = _toks(*range(11))  # blocks [0:4],[4:8] full, [8:11] partial
+    p.allocate(0, prompt, horizon=11)
+    p.note_prefilled(0, 11)     # registers the two full blocks
+    assert len(p.registry) == 2
+
+    ids1, cached = p.allocate(1, prompt, horizon=12)
+    assert cached == 8          # both full blocks shared, tail private
+    lease0 = p.leases[0].blocks
+    assert ids1[:2] == lease0[:2]       # same physical blocks
+    assert ids1[2] != lease0[2]         # private tail
+    assert p.refcount[lease0[0]] == 2 and p.refcount[lease0[1]] == 2
+    assert p.tokens_saved == 8
+    p.check_invariants()
+
+    p.free(0)
+    assert p.refcount[lease0[0]] == 1   # shared blocks survive the free
+    p.check_invariants()
+    p.free(1)
+    assert p.refcount[lease0[0]] == 0   # zero exactly when the last holder retires
+    # registered blocks park in the cached-free list, contents reusable
+    assert lease0[0] in p.cached and lease0[1] in p.cached
+    p.check_invariants()
+
+
+def test_whole_context_never_fully_shared():
+    """At least one token must go through prefill (shared blocks are
+    read-only; the last position needs a private block and the first-token
+    logits need a prefill dispatch)."""
+    p = _pool(bs=4)
+    prompt = _toks(*range(8))   # exactly two full blocks
+    p.allocate(0, prompt, horizon=8)
+    p.note_prefilled(0, 8)
+    _, cached = p.allocate(1, prompt, horizon=8)
+    assert cached == 4          # second block re-prefilled privately
+
+
+def test_cached_free_blocks_revive_for_restore():
+    """The preemption-restore path: free a fully prefilled request, then
+    re-admit the same context — the probe must hit the cached blocks and
+    skip their prefill."""
+    p = _pool(bs=4)
+    ctx = _toks(*range(9))
+    ids0, _ = p.allocate(7, ctx, horizon=12)
+    p.note_prefilled(7, 9)
+    p.free(7)                   # preempt: lease dropped, prefixes cached
+    assert len(p.cached) == 2
+    ids1, cached = p.allocate(7, ctx, horizon=12)
+    assert cached == 8 and ids1[:2] == ids0[:2]
+    assert not p.cached         # revived out of the cached-free list
+    p.check_invariants()
+
+
+def test_cached_eviction_deregisters():
+    """When the free list runs dry, LRU cached blocks are evicted for
+    fresh allocations and their prefix registrations disappear."""
+    p = _pool(bs=4, blocks=4, max_blocks=4)
+    p.allocate(0, _toks(*range(8)), horizon=16)     # all 4 blocks
+    p.note_prefilled(0, 8)
+    p.free(0)
+    assert len(p.cached) == 2 and len(p.free_list) == 2
+    # a fresh 4-block allocation must consume the cached blocks too
+    p.allocate(1, _toks(*range(100, 108)), horizon=16)
+    assert len(p.cached) == 0 and len(p.registry) == 0
+    p.check_invariants()
+
+
+def test_hash_collision_falls_back_to_private(monkeypatch):
+    """Force every chain hash to collide: different tokens must not share
+    (the registration's token compare catches it); identical tokens still
+    may."""
+    monkeypatch.setattr(kv_pool, "block_hash", lambda parent, toks: 42)
+    p = _pool(bs=4)
+    a = _toks(*range(9))
+    b = _toks(*range(50, 59))   # different tokens, same (forced) hash
+    p.allocate(0, a, horizon=9)
+    p.note_prefilled(0, 9)
+    ids_b, cached_b = p.allocate(1, b, horizon=9)
+    assert cached_b == 0                     # collision -> private blocks
+    assert ids_b[0] != p.leases[0].blocks[0]
+    # identical tokens still share where the registration matches: block 0
+    # registered under the (colliding) hash; block 1's registration lost
+    # the slot to it, so only the first block is shareable
+    ids_a2, cached_a2 = p.allocate(2, a, horizon=9)
+    assert cached_a2 == 4
+    assert ids_a2[0] == p.leases[0].blocks[0]
+    assert ids_a2[1] != p.leases[0].blocks[1]
+    p.check_invariants()
+
+
+def test_exhaustion_and_can_admit_gate():
+    p = _pool(bs=4, blocks=4, max_blocks=4)
+    p.allocate(0, _toks(*range(4)), horizon=12)     # 3 of 4 blocks
+    assert p.can_admit(_toks(1), horizon=4)
+    assert not p.can_admit(_toks(1), horizon=8)     # needs 2, has 1
+    with pytest.raises(PoolError, match="exhausted"):
+        p.allocate(1, _toks(1), horizon=8)
+    # a preemption victim's exclusively-held blocks count as about-to-free
+    assert p.blocks_held(0) == 3
+    assert p.can_admit(_toks(1), horizon=8, victim_rid=0)
+    p.check_invariants()
+
+
+def test_victim_credit_excludes_candidate_shared_blocks():
+    """The preemption gate must not double-count a victim block the
+    candidate will *share*: it is already subtracted from the candidate's
+    needs, so crediting it as fresh capacity too would pass the gate and
+    then crash the post-eviction allocate."""
+    p = _pool(bs=4, blocks=4, max_blocks=4)
+    prompt = _toks(*range(8))
+    p.allocate(0, prompt, horizon=8)       # victim: 2 blocks
+    p.note_prefilled(0, 8)                 # both registered
+    p.allocate(1, _toks(*range(90, 94)), horizon=8)  # rest of the pool
+    # candidate = same prompt, 3 blocks needed, shares the victim's first
+    # block (cap keeps the second private).  Even with the victim's
+    # blocks freed the pool cannot host it — the gate must say so.
+    assert not p.can_admit(prompt, horizon=12, victim_rid=0)
+    p.free(0)
+    with pytest.raises(PoolError, match="exhausted"):
+        p.allocate(2, prompt, horizon=12)
+    p.check_invariants()
+
+
+def test_randomized_accounting_equivalence():
+    """Mini-fuzz over alloc/free/note_prefilled: after every operation the
+    re-derived accounting (refcounts from leases, free/cached/leased
+    partition) matches the pool's incremental state."""
+    rng = np.random.default_rng(0)
+    p = _pool(bs=4, blocks=12, max_blocks=4)
+    live: dict[int, int] = {}
+    rid = 0
+    prefixes = [rng.integers(0, 50, 8).astype(np.int32) for _ in range(2)]
+    for _ in range(300):
+        op = rng.random()
+        if op < 0.5:
+            base = prefixes[int(rng.integers(0, 2))]
+            tail = rng.integers(0, 50, int(rng.integers(1, 6))).astype(np.int32)
+            toks = np.concatenate([base[:int(rng.integers(0, 9))], tail])
+            horizon = len(toks) + int(rng.integers(0, 5))
+            if p.blocks_for(horizon) <= p.cfg.max_blocks_per_seq \
+                    and p.can_admit(toks, horizon):
+                _, cached = p.allocate(rid, toks, horizon)
+                live[rid] = len(toks)
+                # prefill some amount past the cached prefix
+                upto = int(rng.integers(cached, len(toks) + 1))
+                p.note_prefilled(rid, upto)
+                rid += 1
+        elif live:
+            victim = int(rng.choice(list(live)))
+            p.free(victim)
+            del live[victim]
+        p.check_invariants()
+    for r in list(live):
+        p.free(r)
+    p.check_invariants()
+    assert p.available() == p.cfg.pool_blocks

@@ -1,0 +1,401 @@
+"""Randomized serving-equivalence harness: paged KV == dense KV.
+
+The oracle property: the block-paged engine (``kv="paged"``) must produce
+**bit-identical** per-request outputs to the dense ring-buffer engine on
+randomized serving traces — arrival gaps, ragged prompt lengths, shared
+prompt prefixes, priorities (admission *and* preemption, including
+mid-chunked-prefill eviction), per-request ``max_new_tokens``, EOS
+retirement, and block-gated admission from an undersized pool.  Greedy
+traces must match exactly, and seeded *sampled* streams must match too
+(the sampler keys on ``(seed, emitted count)`` only, so bit-equal logits
+imply bit-equal samples).
+
+Two drivers for one trace runner:
+
+* a numpy-seeded parametrized sweep (``SERVING_FUZZ_TRACES`` greedy +
+  sampled traces, default 55 total) that runs in any environment — this is
+  the tier-1 guarantee;
+* a hypothesis ``@given`` layer over the same runner when hypothesis is
+  installed (CI's fuzz job), so shrinking finds minimal failing traces.
+
+The paged engine's pool accounting (`KVBlockPool.check_invariants`) is
+re-derived after every tick of every trace.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.serving import Request, SamplingParams, ServingEngine
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # the container may lack the optional extra;
+    HAVE_HYPOTHESIS = False  # the seeded sweep below still fuzzes fully
+
+#: trace counts for the parametrized sweep (greedy + sampled ~= 55 traces)
+N_GREEDY = int(os.environ.get("SERVING_FUZZ_TRACES", "35"))
+N_SAMPLED = max(N_GREEDY * 4 // 7, 2)
+
+SLOTS, MAX_LEN, CHUNK, BLOCK = 2, 32, 4, 8
+
+CFG = ModelConfig(name="fuzz-tiny", family="dense", n_layers=2, d_model=64,
+                  vocab=96, n_heads=4, n_kv_heads=2, d_ff=128,
+                  dtype="float32", param_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def fuzz_model():
+    m = Model(CFG)
+    return m, m.init(jax.random.key(0))
+
+
+# -- trace generation ---------------------------------------------------------
+
+@dataclasses.dataclass
+class TraceEvent:
+    gap: int                 # engine ticks before this submission
+    prompt: np.ndarray
+    max_new: int
+    priority: int
+    sampling: SamplingParams | None
+
+
+@dataclasses.dataclass
+class Trace:
+    events: list
+    eos_id: int              # -1 = no EOS retirement
+    pool_blocks: int         # undersized pools exercise admission gating
+
+
+def make_trace(seed: int, sampled: bool) -> Trace:
+    rng = np.random.default_rng(seed)
+    n_req = int(rng.integers(2, 7))
+    # shared prefixes: block-aligned ones hit the prefix cache, unaligned
+    # ones only share partially — draw both
+    prefixes = [rng.integers(0, CFG.vocab, int(rng.integers(4, 17)))
+                .astype(np.int32) for _ in range(2)]
+    events = []
+    for rid in range(n_req):
+        r = rng.random()
+        if r < 0.5:  # shared-prefix prompt
+            base = prefixes[int(rng.integers(0, 2))]
+            tail = rng.integers(0, CFG.vocab,
+                                int(rng.integers(1, 6))).astype(np.int32)
+            prompt = np.concatenate([base, tail])
+        else:
+            prompt = rng.integers(0, CFG.vocab,
+                                  int(rng.integers(1, 21))).astype(np.int32)
+        max_new = int(rng.integers(0, 9))
+        max_new = min(max_new, MAX_LEN - len(prompt))
+        sampling = None
+        if sampled:
+            sampling = SamplingParams(
+                temperature=float(rng.uniform(0.5, 1.2)),
+                top_k=int(rng.choice([0, 8, 20])),
+                top_p=float(rng.choice([1.0, 0.9])),
+                seed=seed * 1000 + rid)
+        events.append(TraceEvent(
+            gap=int(rng.integers(0, 6)),
+            prompt=prompt,
+            max_new=max_new,
+            # late high-priority arrivals preempt (the gaps let earlier
+            # requests reach decode — or sit mid-prefill, the bugfix case)
+            priority=1 if rng.random() < 0.25 else 0,
+            sampling=sampling))
+    return Trace(events=events,
+                 eos_id=3 if rng.random() < 0.5 else -1,
+                 pool_blocks=int(rng.choice([6, SLOTS * MAX_LEN // BLOCK])))
+
+
+# -- trace execution ----------------------------------------------------------
+
+def run_trace(model, params, trace: Trace, kv: str) -> list[list[int]]:
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked",
+                        replan_every=10_000, eos_id=trace.eos_id, kv=kv,
+                        kv_block_size=BLOCK if kv == "paged" else None,
+                        kv_pool_blocks=trace.pool_blocks
+                        if kv == "paged" else None)
+    reqs = []
+    for rid, ev in enumerate(trace.events):
+        for _ in range(ev.gap):
+            eng.step()
+            if eng.pool is not None:
+                eng.pool.check_invariants()
+        req = Request(rid=rid, prompt=ev.prompt.copy(),
+                      max_new_tokens=ev.max_new, priority=ev.priority,
+                      sampling=ev.sampling)
+        eng.submit(req)
+        reqs.append(req)
+    steps = 0
+    while eng.scheduler.pending() and steps < 3000:
+        eng.step()
+        steps += 1
+        if eng.pool is not None:
+            eng.pool.check_invariants()
+    assert not eng.scheduler.pending(), f"{kv} engine did not drain"
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert len(r.generated) <= r.max_new_tokens
+    if eng.pool is not None:
+        eng.pool.check_invariants()
+        assert eng.pool.stats()["live_requests"] == 0
+        assert eng.pool.stats()["blocks_in_use"] == 0
+    return [list(r.generated) for r in reqs]
+
+
+def assert_equivalent(model, params, trace: Trace) -> None:
+    dense = run_trace(model, params, trace, "dense")
+    paged = run_trace(model, params, trace, "paged")
+    assert dense == paged, (
+        f"paged/dense divergence: dense={dense} paged={paged}")
+
+
+# -- the randomized sweeps (run in every environment) -------------------------
+
+@pytest.mark.parametrize("seed", range(N_GREEDY))
+def test_greedy_trace_equivalence(fuzz_model, seed):
+    """Greedy outputs bit-identical between paged and dense engines."""
+    model, params = fuzz_model
+    assert_equivalent(model, params, make_trace(seed, sampled=False))
+
+
+@pytest.mark.parametrize("seed", range(10_000, 10_000 + N_SAMPLED))
+def test_sampled_trace_equivalence(fuzz_model, seed):
+    """Seeded sampled streams identical between paged and dense engines."""
+    model, params = fuzz_model
+    assert_equivalent(model, params, make_trace(seed, sampled=True))
+
+
+# -- the hypothesis layer (CI: shrinks failures to minimal traces) ------------
+
+if HAVE_HYPOTHESIS:
+    _HYP = settings(
+        max_examples=int(os.environ.get("SERVING_FUZZ_EXAMPLES", "15")),
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.function_scoped_fixture])
+
+    @_HYP
+    @given(seed=st.integers(0, 2**31 - 1), sampled=st.booleans())
+    def test_hypothesis_trace_equivalence(fuzz_model, seed, sampled):
+        model, params = fuzz_model
+        assert_equivalent(model, params, make_trace(seed, sampled=sampled))
+
+
+# -- deterministic regressions ------------------------------------------------
+
+def _prefix_trace(max_new=4, priority_last=0, pool_blocks=16):
+    """Five requests, four sharing a 16-token (block-aligned) prefix."""
+    rng = np.random.default_rng(123)
+    prefix = rng.integers(0, CFG.vocab, 16).astype(np.int32)
+    events = []
+    for rid in range(5):
+        if rid < 4:
+            prompt = np.concatenate(
+                [prefix, rng.integers(0, CFG.vocab, 3 + rid).astype(np.int32)])
+        else:
+            prompt = rng.integers(0, CFG.vocab, 10).astype(np.int32)
+        events.append(TraceEvent(gap=2 if rid else 0, prompt=prompt,
+                                 max_new=max_new,
+                                 priority=priority_last if rid == 4 else 0,
+                                 sampling=None))
+    return Trace(events=events, eos_id=-1, pool_blocks=pool_blocks)
+
+
+def test_shared_prefix_skips_prefill_and_matches(fuzz_model):
+    """The prefix cache must actually fire (prefill tokens saved > 0) and
+    the outputs must still equal the dense engine's."""
+    model, params = fuzz_model
+    trace = _prefix_trace()
+    dense = run_trace(model, params, trace, "dense")
+
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked",
+                        replan_every=10_000, kv="paged",
+                        kv_block_size=BLOCK, kv_pool_blocks=16)
+    reqs = []
+    for rid, ev in enumerate(trace.events):
+        for _ in range(ev.gap):
+            eng.step()
+        req = Request(rid=rid, prompt=ev.prompt.copy(),
+                      max_new_tokens=ev.max_new, priority=ev.priority)
+        eng.submit(req)
+        reqs.append(req)
+    eng.run()
+    assert [list(r.generated) for r in reqs] == dense
+    # rid 0 prefills the prefix; later sharers skip its two full blocks
+    assert eng.pool.tokens_saved >= 16
+    assert eng.stats()["prefill_tokens_saved"] == eng.pool.tokens_saved
+
+
+def test_mid_prefill_preemption_regression(fuzz_model):
+    """The satellite bugfix: a VIP arriving while every slot is still
+    mid-chunked-prefill evicts one — and the victim's consumed chunk
+    budget is recomputed (pos reset), so its restored output still equals
+    a solo run and the paged engine still equals the dense engine."""
+    model, params = fuzz_model
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, CFG.vocab, 20).astype(np.int32)
+               for _ in range(SLOTS)]
+    vip_prompt = rng.integers(0, CFG.vocab, 6).astype(np.int32)
+
+    results = {}
+    for kv in ("dense", "paged"):
+        eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                            chunk=CHUNK, prefill_mode="chunked",
+                            replan_every=10_000, kv=kv,
+                            kv_block_size=BLOCK if kv == "paged" else None,
+                            kv_pool_blocks=16 if kv == "paged" else None)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.step()   # admit; prompts are 20 tokens, chunk 4: mid-prefill
+        eng.step()
+        assert all(s is not None and s.pos < s.prompt_len
+                   for s in eng.scheduler.active)
+        vip = Request(rid=99, prompt=vip_prompt.copy(), max_new_tokens=4,
+                      priority=5)
+        eng.submit(vip)
+        eng.step()
+        # a mid-prefill victim was evicted with its budget recomputed
+        assert eng.scheduler.preempted == 1
+        victim = next(s for s in eng.scheduler.waiting)
+        assert victim.pos == 0 and victim.req.generated == []
+        eng.run()
+        assert all(r.done and len(r.generated) == 4 for r in reqs + [vip])
+        if eng.pool is not None:
+            eng.pool.check_invariants()
+        results[kv] = [list(r.generated) for r in reqs + [vip]]
+    assert results["dense"] == results["paged"]
+
+    # and the preempted request's output equals an unpreempted solo run
+    for i, p in enumerate(prompts):
+        solo_eng = ServingEngine(model, params, slots=1, max_len=MAX_LEN,
+                                 chunk=CHUNK, prefill_mode="chunked",
+                                 replan_every=10_000)
+        solo = Request(rid=0, prompt=p.copy(), max_new_tokens=4)
+        solo_eng.submit(solo)
+        solo_eng.run()
+        assert list(solo.generated) == results["dense"][i]
+
+
+def test_paged_submit_rejects_over_horizon_requests(fuzz_model):
+    """prompt + max_new_tokens must fit the paged horizon: past it there
+    is no block to write (the dense ring wraps instead), and a preemption
+    restore would fold generated tokens into a context the pool cannot
+    lease.  Dense keeps its legacy wrap behaviour."""
+    model, params = fuzz_model
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked", kv="paged",
+                        kv_block_size=BLOCK)
+    rng = np.random.default_rng(2)
+    big = Request(rid=0, prompt=rng.integers(0, CFG.vocab, 30)
+                  .astype(np.int32), max_new_tokens=8)
+    with pytest.raises(ValueError, match="KV horizon"):
+        eng.submit(big)
+    dense_eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                              chunk=CHUNK, prefill_mode="chunked")
+    dense_eng.submit(Request(rid=0, prompt=big.prompt.copy(),
+                             max_new_tokens=8))  # dense still accepts
+
+
+def test_preemption_restore_at_exact_horizon(fuzz_model):
+    """A request sized to exactly fill the horizon (prompt + max_new ==
+    max_len), preempted mid-decode: the restore's folded context plus its
+    remaining budget still fits, completes, and matches dense."""
+    model, params = fuzz_model
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, CFG.vocab, MAX_LEN - 16).astype(np.int32)
+    vip_prompt = rng.integers(0, CFG.vocab, 6).astype(np.int32)
+    outs = {}
+    for kv in ("dense", "paged"):
+        eng = ServingEngine(model, params, slots=1, max_len=MAX_LEN,
+                            chunk=CHUNK, prefill_mode="chunked",
+                            replan_every=10_000, kv=kv,
+                            kv_block_size=BLOCK if kv == "paged" else None,
+                            kv_pool_blocks=12 if kv == "paged" else None)
+        eng.scheduler.cfg.preempt = 1
+        low = Request(rid=0, prompt=prompt.copy(), max_new_tokens=16)
+        eng.submit(low)
+        for _ in range(8):
+            eng.step()
+        assert len(low.generated) >= 1 and not low.done
+        vip = Request(rid=1, prompt=vip_prompt.copy(), max_new_tokens=2,
+                      priority=5)
+        eng.submit(vip)
+        eng.run()
+        assert eng.scheduler.preempted >= 1
+        assert low.done and len(low.generated) == 16 and vip.done
+        if eng.pool is not None:
+            eng.pool.check_invariants()
+        outs[kv] = [list(low.generated), list(vip.generated)]
+    assert outs["dense"] == outs["paged"]
+
+
+def test_gated_requests_counts_requests_not_polls(fuzz_model):
+    """A queue head blocked by the KV gate is re-polled every tick; the
+    stat must count one deferred request, not one per poll."""
+    model, params = fuzz_model
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked",
+                        replan_every=10_000, kv="paged",
+                        kv_block_size=BLOCK, kv_pool_blocks=4)
+    rng = np.random.default_rng(6)
+    # first request takes the whole 4-block pool (32-token horizon)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, CFG.vocab, 24)
+                       .astype(np.int32), max_new_tokens=8))
+    eng.step()
+    # second request blocks on the gate for many ticks
+    eng.submit(Request(rid=1, prompt=rng.integers(0, CFG.vocab, 8)
+                       .astype(np.int32), max_new_tokens=4))
+    eng.run()
+    assert eng.pool.stats()["gated_requests"] == 1
+    assert eng.pool.stats()["live_requests"] == 0
+
+
+def test_preemption_decode_restore_uses_prefix_cache(fuzz_model):
+    """A preempted decoder's restore re-prefills its context — but its
+    prompt's registered blocks survive in the cached-free list, so the
+    paged restore skips them (tokens_saved grows) and output still matches
+    the dense engine."""
+    model, params = fuzz_model
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, CFG.vocab, 16).astype(np.int32)
+    vip_prompt = rng.integers(0, CFG.vocab, 8).astype(np.int32)
+
+    outs = {}
+    saved = {}
+    for kv in ("dense", "paged"):
+        eng = ServingEngine(model, params, slots=1, max_len=MAX_LEN,
+                            chunk=CHUNK, prefill_mode="chunked",
+                            replan_every=10_000, kv=kv,
+                            kv_block_size=BLOCK if kv == "paged" else None,
+                            kv_pool_blocks=12 if kv == "paged" else None)
+        eng.scheduler.cfg.preempt = 1  # a 1-slot engine defaults to 0
+        low = Request(rid=0, prompt=prompt.copy(), max_new_tokens=8)
+        eng.submit(low)
+        for _ in range(8):  # prefill 16 tokens at chunk 4, start decoding
+            eng.step()
+        assert len(low.generated) >= 1 and not low.done
+        vip = Request(rid=1, prompt=vip_prompt.copy(), max_new_tokens=2,
+                      priority=5)
+        eng.submit(vip)
+        eng.run()
+        assert eng.scheduler.preempted == 1
+        assert low.done and vip.done
+        outs[kv] = [list(low.generated), list(vip.generated)]
+        if eng.pool is not None:
+            saved[kv] = eng.pool.tokens_saved
+    assert outs["dense"] == outs["paged"]
+    # the restore shared the prompt's two full 8-token blocks
+    assert saved["paged"] >= 16

@@ -219,6 +219,87 @@ def test_no_preemption_while_a_free_slot_remains():
     assert sreq.state is RequestState.DECODE
 
 
+def test_mid_prefill_preemption_recomputes_chunk_budget():
+    """With no DECODE victim, a strictly-higher-priority arrival evicts a
+    mid-chunked-prefill slot — and the victim's consumed chunk budget is
+    reset (the regression the fuzz harness also guards end-to-end)."""
+    sched = Scheduler(SchedulerConfig(slots=2, chunk=4))
+    for rid in range(2):
+        sched.submit(_req(rid, n=20, max_new=4, priority=0))
+    plan = sched.plan_tick()
+    for a in plan.prefill:
+        sched.note_prefilled(a.sreq, a.n_new, None)  # 4 of 20 tokens
+    victims = [s for s in sched.active]
+    assert all(s.state is RequestState.PREFILL and s.pos == 4
+               for s in victims)
+    sched.submit(_req(9, n=4, max_new=2, priority=5))
+    plan = sched.plan_tick()
+    assert [s.req.rid for s in plan.admissions] == [9]
+    assert sched.preempted == 1
+    victim = next(s for s in sched.waiting)
+    # zero generated tokens folded, chunk budget recomputed (pos reset)
+    assert victim.req.generated == [] and victim.pos == 0
+    assert victim.prompt_len == 20
+    # its eventual re-admission prefills from position 0
+    for a in plan.prefill:
+        done = a.start + a.n_new >= a.sreq.prompt_len
+        sched.note_prefilled(a.sreq, a.n_new, 0 if done else None)
+    sched.note_decoded(plan.admissions[0].slot, 0)  # VIP retires (max 2)
+    plan = sched.plan_tick()
+    readmitted = [a for a in plan.prefill if a.sreq is victim]
+    assert readmitted and readmitted[0].start == 0
+
+
+def test_kv_gate_defers_admission_and_counts_victim_blocks():
+    """The paged-KV hooks: a failing gate leaves the queue head waiting
+    (FIFO preserved); the preemption path re-checks with the victim's
+    blocks credited."""
+    sched = Scheduler(SchedulerConfig(slots=2, chunk=32))
+    gate_log = []
+
+    def gate(sreq, victim=None):
+        gate_log.append((sreq.req.rid, victim.req.rid if victim else None))
+        return sreq.req.rid != 1  # rid 1 never fits
+
+    admitted = []
+    sched.kv_gate = gate
+    sched.on_admit = lambda s: admitted.append(s.req.rid)
+    for rid in range(3):
+        sched.submit(_req(rid, n=4, max_new=8))
+    plan = sched.plan_tick()
+    # rid 0 admitted; rid 1 blocked at the head gates rid 2 too (FIFO)
+    assert [s.req.rid for s in plan.admissions] == [0]
+    assert admitted == [0]
+    assert [s.req.rid for s in sched.waiting] == [1, 2]
+    # a VIP that fits preempts once the batch decodes; the gate sees the victim
+    for a in plan.prefill:
+        sched.note_prefilled(a.sreq, a.n_new, first_token=0)
+    sched.submit(_req(7, n=4, max_new=2, priority=5))
+    sched.plan_tick()  # admits 7 into the remaining free slot, no preempt
+    sched.submit(_req(8, n=4, max_new=2, priority=5))
+    plan = sched.plan_tick()
+    assert (8, 0) in gate_log  # victim credit consulted
+    assert sched.preempted == 1
+
+
+def test_release_hook_fires_on_retire_and_preempt():
+    released = []
+    sched = Scheduler(SchedulerConfig(slots=2, chunk=32))
+    sched.on_release = lambda s: released.append(s.req.rid)
+    s0 = sched.submit(_req(0, n=4, max_new=1))
+    sched.plan_tick()
+    sched.note_prefilled(s0, 4, first_token=1)   # retires (budget 1)
+    assert released == [0]
+    s1 = sched.submit(_req(1, n=4, max_new=8))
+    s3 = sched.submit(_req(3, n=4, max_new=8))
+    sched.plan_tick()                            # both slots fill
+    sched.note_prefilled(s1, 4, first_token=1)
+    sched.note_prefilled(s3, 4, first_token=1)
+    sched.submit(_req(2, n=4, max_new=1, priority=9))
+    sched.plan_tick()          # preempts the newest equal-priority decoder
+    assert released == [0, 3]
+
+
 def test_zero_budget_request_retires_without_a_slot():
     sched = Scheduler(SchedulerConfig(slots=1, chunk=32))
     sched.submit(_req(0, max_new=0))
@@ -366,6 +447,33 @@ def test_serve_schedule_plans_prefill_mode_and_preempt_bound():
     assert 0 <= dear["preempt"] <= cheap["preempt"] <= 3
     # no stats yet: conservative single-preemption default
     assert plan(decode_step_s=0.0, prefill_token_s=0.0)["preempt"] == 1
+
+
+def test_serve_schedule_plans_paged_pool_geometry():
+    g = serve_plan_graph("x", 4, 256, 512, 512)
+    base = {"slots": 4, "max_len": 128, "kv": "paged"}
+    _, rep = pipeline.optimize(g, passes=("serve_schedule",), options=base)
+    plan = rep.passes[-1].summary
+    assert plan["kv"] == "paged"
+    assert plan["prefill_mode"] == "chunked"  # a pool cannot one-shot
+    assert 128 % plan["kv_block_size"] == 0
+    # no stats: dense-equivalent capacity (admission never block-gated)
+    assert plan["kv_pool_blocks"] == 4 * (128 // plan["kv_block_size"])
+    assert plan["kv_saving"] == 0.0
+    # with prompt stats the pool shrinks below slots * max_len
+    _, rep2 = pipeline.optimize(
+        g, passes=("serve_schedule",),
+        options={**base, "decode_step_s": 0.002, "prefill_token_s": 1e-4,
+                 "avg_prompt_len": 24.0})
+    plan2 = rep2.passes[-1].summary
+    assert plan2["kv_pool_blocks"] * plan2["kv_block_size"] < 4 * 128
+    assert plan2["kv_saving"] > 0
+    # one maximal request always fits
+    assert plan2["kv_pool_blocks"] >= 128 // plan2["kv_block_size"]
+    # dense plans carry no pool fields
+    _, rep3 = pipeline.optimize(g, passes=("serve_schedule",),
+                                options={"slots": 4, "max_len": 128})
+    assert "kv_block_size" not in rep3.passes[-1].summary
 
 
 def test_scheduler_adopts_admit_preempt_and_replan_fields():
