@@ -646,6 +646,43 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
     }
 
 
+#: speculative draft lengths the planner may choose between (0 = off); a
+#: closed set for the same reason as the chunk sizes — each (k+1)-wide
+#: verify dispatch is a distinct compiled shape.
+SERVE_SPEC_KS: tuple[int, ...] = (0, 2, 4, 6, 8, 12, 16)
+
+#: modeled marginal cost of one extra verify position, in decode-step
+#: units.  The verify forward is a fused scan of k+1 decode bodies, so a
+#: position costs roughly one decode step's compute but amortizes its
+#: dispatch; docs/serving.md states this as the verify overhead bound.
+SPEC_VERIFY_OVERHEAD = 0.5
+
+
+def _plan_spec_k(accept_rate: float) -> int:
+    """Choose the draft length from the observed acceptance rate.
+
+    Expected tokens committed by one verify over ``k`` drafts, when each
+    draft is accepted i.i.d. with probability ``p``, is the geometric
+    partial sum ``E(k) = (1 - p^(k+1)) / (1 - p)``; its cost is modeled as
+    ``1 + SPEC_VERIFY_OVERHEAD * k`` decode steps (+1 for the bonus
+    position).  Pick the ``k`` in :data:`SERVE_SPEC_KS` with the best
+    tokens-per-step; when nothing beats plain decode (``k = 0``, score 1)
+    speculation is planned **off** — low-acceptance workloads (random
+    text) must not pay the draft tax.  ``accept_rate < 0`` means no drafts
+    verified yet: start mid-range and let the first measured rate decide.
+    """
+    if accept_rate < 0:
+        return 4
+    p = min(max(accept_rate, 0.0), 0.999)
+    best_k, best_score = 0, 1.0
+    for k in SERVE_SPEC_KS:
+        expected = (1.0 - p ** (k + 1)) / (1.0 - p)
+        score = expected / (1.0 + SPEC_VERIFY_OVERHEAD * k)
+        if score > best_score + 1e-9:
+            best_k, best_score = k, score
+    return best_k
+
+
 def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     """Serving-schedule planning: StageTimer stats -> slot/chunk plan.
 
@@ -671,7 +708,11 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
         engines additionally get ``kv_block_size`` / ``kv_pool_blocks``
         sized from the prompt-length distribution (see
         :func:`_plan_kv_pool`), and their prefill mode is pinned to
-        ``chunked`` (a block pool has no one-shot splice path).
+        ``chunked`` (a block pool has no one-shot splice path);
+      * ``spec`` — ``"off"`` (default), ``"ngram"`` or ``"draft"``:
+        speculative engines additionally get a planned ``spec_k`` draft
+        length chosen from ``SERVE_SPEC_KS`` by the observed
+        ``spec_accept_rate`` (see :func:`_plan_spec_k`; -1 = no stats yet).
 
     The plan — chunk size from ``SERVE_CHUNK_SIZES``, admission width,
     per-tick preemption bound, ``batched``-vs-``chunked`` prefill mode,
@@ -748,6 +789,16 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     if kv == "paged":
         plan["kv"] = kv
         plan.update(_plan_kv_pool(slots, max_len, chunk, avg_prompt))
+    spec = str(o.get("spec", "off"))
+    if spec != "off":
+        # speculative engines: plan the draft length from the observed
+        # acceptance rate (the engine feeds it through the scheduler's
+        # replan path); spec_k == 0 turns speculation off until a later
+        # replan sees a better rate
+        rate = float(o.get("spec_accept_rate", -1.0))
+        plan["spec"] = spec
+        plan["spec_k"] = _plan_spec_k(rate)
+        plan["spec_accept_rate"] = rate
     out = g.clone()
     for node in out.nodes:
         node.dataflow["serve_plan"] = dict(plan)

@@ -11,9 +11,12 @@ re-planning the chunk budget / prefill mode from observed stage stats.
 Each request carries its own SamplingParams (``--temperature 0`` is exact
 greedy; every request gets its own PRNG stream, seeded ``--seed + rid``).
 Throughput is computed from the tokens requests *actually* emitted — with
-``--eos-id`` set, a request may retire well before ``--max-new``.  Exits
-nonzero when the batched decode loop produced no throughput — CI runs this
-as the serving smoke check.
+``--eos-id`` set, a request may retire well before ``--max-new``, and with
+``--spec`` the verify forward scores draft positions the target may
+reject: scored-but-rejected positions are **never** counted as emissions
+(they appear separately in the spec report as drafts/sec and the
+accepted-per-draft ratio).  Exits nonzero when the batched decode loop
+produced no throughput — CI runs this as the serving smoke check.
 """
 from __future__ import annotations
 
@@ -27,7 +30,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.models.model import Model
 from repro.serving import (Request, SamplingParams, ServingEngine,
-                           settle_ticks)
+                           SpecParams, settle_ticks)
 
 
 def main(argv=None):
@@ -59,6 +62,18 @@ def main(argv=None):
     ap.add_argument("--kv-pool-blocks", type=int, default=None,
                     help="physical blocks in the pool (default: planned; "
                          "smaller pools gate admission on free blocks)")
+    ap.add_argument("--spec", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="speculative decoding: 'ngram' self-drafts via "
+                         "prompt lookup over each request's own context; "
+                         "'draft' runs the arch's reduced config as a "
+                         "draft model (own params, greedy proposals); "
+                         "either way committed streams are bit-identical "
+                         "to spec=off")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft tokens per verify step (default: planned "
+                         "by serve_schedule from the observed acceptance "
+                         "rate; 0 disables drafting)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy argmax (the default policy)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -86,13 +101,22 @@ def main(argv=None):
     prefill_mode = args.prefill_mode
     if args.kv == "paged" and prefill_mode is None:
         prefill_mode = "chunked"  # the only mode a block pool can execute
+    spec_kw = {}
+    if args.spec != "off":
+        spec_kw["spec"] = SpecParams(mode=args.spec, k=args.spec_k)
+        if args.spec == "draft":
+            draft_cfg = cfg.reduced()
+            draft = Model(draft_cfg)
+            spec_kw["draft_model"] = draft
+            spec_kw["draft_params"] = draft.init(
+                jax.random.key(args.seed + 1))
     engine = ServingEngine(model, params, slots=args.slots,
                            max_len=args.max_len, chunk=args.chunk,
                            eos_id=args.eos_id,
                            prefill_mode=prefill_mode,
                            replan_every=args.replan_every,
                            kv=args.kv, kv_block_size=args.kv_block_size,
-                           kv_pool_blocks=args.kv_pool_blocks)
+                           kv_pool_blocks=args.kv_pool_blocks, **spec_kw)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for rid in range(args.requests):
@@ -136,6 +160,19 @@ def main(argv=None):
           f"{stats['scheduler']['preempted']} preemptions")
     print(f"plan: {stats['plan']} (prefill_mode={stats['prefill_mode']}, "
           f"kv={stats['kv']})")
+    if "spec" in stats:
+        sp = stats["spec"]
+        # emissions vs draft traffic are different currencies: the verify
+        # forward scores draft positions, the target keeps only the
+        # accepted prefix — report them side by side, never summed
+        print(f"spec: mode={sp['mode']} k={sp['k']} — "
+              f"{total_tokens} tokens emitted, "
+              f"{sp['drafts_proposed']} drafts proposed "
+              f"({sp['drafts_proposed'] / dt:.1f} drafts/s), "
+              f"{sp['drafts_accepted']} accepted "
+              f"(accept ratio {sp['accept_rate']:.2f}), "
+              f"{sp['spec_tokens']} tokens via {sp['verify_calls']} "
+              f"verify dispatches")
     if "kv_pool" in stats:
         kp = stats["kv_pool"]
         print(f"kv pool: {kp['pool_blocks']} x {kp['block_size']}-token "

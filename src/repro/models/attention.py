@@ -283,6 +283,30 @@ def init_paged_kv_cache(batch: int, pool_blocks: int, block_size: int,
     )
 
 
+def rollback_kv_cache(cache: KVCache, keep_len: jax.Array,
+                      rows: jax.Array) -> KVCache:
+    """Rewind slot rows ((B,) bool) to ``keep_len`` ((B,) int) context
+    tokens: ring entries at absolute positions >= keep_len are invalidated
+    and the write pointer moves back, exactly undoing the rejected-suffix
+    writes of a speculative verify.  Stale K/V payloads are dead once no
+    position points at them (same contract as ``reset_cache_rows``).
+    Leaves may carry a leading layer axis — shapes broadcast."""
+    m = rows[:, None] & (cache.positions >= keep_len[:, None])
+    return cache._replace(
+        positions=jnp.where(m, -1, cache.positions),
+        length=jnp.where(rows, keep_len, cache.length).astype(jnp.int32))
+
+
+def rollback_paged_kv_cache(cache: PagedKVCache, keep_len: jax.Array,
+                            rows: jax.Array) -> PagedKVCache:
+    """Paged rewind is pure metadata: truncate ``length`` and the rejected
+    positions cease to exist — attention masks by length, the block table
+    keeps its (logical-order) layout, and the host-side pool may then free
+    strandable tail blocks (``KVBlockPool.truncate``)."""
+    return cache._replace(
+        length=jnp.where(rows, keep_len, cache.length).astype(jnp.int32))
+
+
 def _project(p, x, name):
     w = p[name].astype(x.dtype)
     return jnp.einsum("bsd,dhk->bshk", x, w)

@@ -364,6 +364,75 @@ class Model:
         logits = unembed(params["embed"]["tokens"], x)[:, 0]
         return logits, new_caches
 
+    def verify_step(self, params, caches, tokens, n_new, batch_axes=(),
+                    live=None):
+        """Speculative verify: score ``K1 = k+1`` positions per row in one
+        dispatch.  tokens: (B, K1) = per row ``[pending, draft_1..draft_k]``
+        right-padded; n_new: (B,) valid positions (0 = bystander row).
+        Returns (logits (B, K1, V), updated caches with all n_new[b] tokens
+        written — the engine rolls rejected suffixes back afterwards).
+
+        The body is a ``lax.scan`` over the *exact* single-token decode
+        step (``decoder_stack_decode``), with a per-step live mask
+        ``live & (i < n_new)``, so position ``i``'s logits are bit-identical
+        to what ``serve_step`` would produce after feeding the first ``i``
+        tokens — the property the serving-equivalence fuzz harness pins
+        down.  With K1 == 1 this *is* the existing decode step.  Chunked
+        prefill attention is deliberately not reused here: its batched
+        einsum contracts in a different order, which is float-exact only to
+        an ulp — not good enough for the bitwise oracle.
+        """
+        cfg = self.cfg
+        if not cfg.attention_only or cfg.sliding_window:
+            raise NotImplementedError(
+                "speculative verify needs a full-attention family (rollback "
+                f"rewinds the cache by position), not {cfg.family}"
+                + (" with a sliding window" if cfg.sliding_window else ""))
+        paged = self._is_paged(caches)
+        B, K1 = tokens.shape
+        base_live = (n_new > 0) if live is None else (live & (n_new > 0))
+
+        def body(carry, inp):
+            caches = carry
+            tok, i = inp                       # tok: (B,), i: step index
+            step_live = base_live & (i < n_new)
+            x = embed_lookup(params["embed"]["tokens"], tok[:, None],
+                             self.dtype)
+            x, new_caches = T.decoder_stack_decode(
+                params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
+                batch_axes=batch_axes, use_pallas=self.use_pallas,
+                live=step_live if paged else None)
+            if not paged:
+                def keep(new, old):
+                    m = step_live.reshape((1, B) + (1,) * (new.ndim - 2))
+                    return jnp.where(m, new, old)
+                new_caches = jax.tree.map(keep, new_caches, caches)
+            x = rms_norm(x, params["final_norm"])
+            logits = unembed(params["embed"]["tokens"], x)[:, 0]
+            return new_caches, logits
+
+        new_caches, logits = lax.scan(
+            body, caches, (tokens.T, jnp.arange(K1)))
+        return logits.transpose(1, 0, 2), new_caches
+
+    def rollback_cache_rows(self, caches, keep_len, rows):
+        """Rewind slot rows ((B,) bool) to ``keep_len`` ((B,) int32)
+        context tokens — the speculative-decode rejection path.  Dense:
+        ring entries past keep_len are invalidated and the write pointer
+        moves back; paged: a pure length truncation (the host-side pool
+        frees strandable tail blocks separately)."""
+        kv = caches.kv
+        if not hasattr(kv, "length"):
+            raise NotImplementedError(
+                f"{self.cfg.family} caches carry recurrent state that "
+                "cannot be rewound; speculative decoding needs an "
+                "attention-only family")
+        if isinstance(kv, A.PagedKVCache):
+            kv = A.rollback_paged_kv_cache(kv, keep_len, rows)
+        else:
+            kv = A.rollback_kv_cache(kv, keep_len, rows)
+        return caches._replace(kv=kv)
+
     def reset_cache_rows(self, caches, rows):
         """Mark slot rows ``rows`` ((B,) bool) empty for request refill.
 

@@ -1,10 +1,15 @@
 from .engine import Request, ServingEngine, settle_ticks
 from .kv_pool import KVBlockPool, PoolConfig, PoolError
-from .sampling import GREEDY, SamplingParams, sample_tokens
+from .sampling import (GREEDY, SamplingParams, sample_token_grid,
+                       sample_tokens)
 from .scheduler import (RequestState, ScheduledRequest, Scheduler,
                         SchedulerConfig, TickPlan, serve_plan_graph)
+from .speculative import (SPEC_OFF, DraftModelProposer, NGramProposer,
+                          SpecParams, SpecStats, propose_ngram)
 
 __all__ = ["ServingEngine", "Request", "Scheduler", "SchedulerConfig",
            "RequestState", "ScheduledRequest", "TickPlan",
            "serve_plan_graph", "SamplingParams", "GREEDY", "sample_tokens",
-           "settle_ticks", "KVBlockPool", "PoolConfig", "PoolError"]
+           "sample_token_grid", "settle_ticks", "KVBlockPool", "PoolConfig",
+           "PoolError", "SpecParams", "SPEC_OFF", "NGramProposer",
+           "DraftModelProposer", "SpecStats", "propose_ngram"]

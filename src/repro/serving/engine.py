@@ -50,9 +50,11 @@ import numpy as np
 from repro.core.pipeline import StageTimer
 
 from .kv_pool import KVBlockPool, PoolConfig
-from .sampling import SamplingParams, sample_tokens
+from .sampling import SamplingParams, sample_token_grid, sample_tokens
 from .scheduler import (RequestState, Scheduler, SchedulerConfig, TickPlan,
                         serve_plan_graph)
+from .speculative import (SPEC_OFF, DraftModelProposer, NGramProposer,
+                          SpecParams, SpecStats)
 
 
 @dataclasses.dataclass
@@ -64,6 +66,8 @@ class Request:
     sampling: SamplingParams | None = None
     #: higher admits first and may preempt strictly-lower DECODE slots
     priority: int = 0
+    #: per-request speculative-decoding policy; None = the engine's default
+    spec: SpecParams | None = None
     generated: list = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -96,6 +100,15 @@ def _serving_jits(model, max_len: int) -> dict:
                 lambda c, rows: model.reset_cache_rows(c, rows)),
             "sample": jax.jit(
                 functools.partial(sample_tokens, vocab=model.cfg.vocab)),
+            # speculative decoding (jax.jit re-traces per distinct verify
+            # width K1, bounded by the closed spec-k candidate set)
+            "verify": jax.jit(
+                lambda p, c, t, nn: model.verify_step(p, c, t, nn)),
+            "rollback": jax.jit(
+                lambda c, keep, rows: model.rollback_cache_rows(
+                    c, keep, rows)),
+            "sample_grid": jax.jit(
+                functools.partial(sample_token_grid, vocab=model.cfg.vocab)),
         }
     return cache[max_len]
 
@@ -107,7 +120,9 @@ class ServingEngine:
                  prefill_mode: str | None = None, chunk: int = 32,
                  replan_every: int = 32, kv: str = "dense",
                  kv_block_size: int | None = None,
-                 kv_pool_blocks: int | None = None):
+                 kv_pool_blocks: int | None = None,
+                 spec: SpecParams | None = None, spec_k_max: int = 16,
+                 draft_model=None, draft_params=None):
         if kv not in ("dense", "paged"):
             raise ValueError(f"unknown kv mode {kv!r}; have dense|paged")
         self.model = model
@@ -118,6 +133,22 @@ class ServingEngine:
         self.greedy = greedy
         self.kv = kv
         self.pool: KVBlockPool | None = None
+        #: speculative policy for requests that carry no SpecParams of
+        #: their own; SPEC_OFF = plain one-token-per-tick decode.
+        self.default_spec = spec if spec is not None else SPEC_OFF
+        self._spec_k_max = int(spec_k_max)
+        self.spec_stats = SpecStats()
+        self._ngram = NGramProposer()
+        self._draft: DraftModelProposer | None = None
+        if draft_model is not None:
+            self._draft = DraftModelProposer(
+                draft_model, draft_params, slots=slots, max_len=max_len)
+        if self.default_spec.mode == "draft" and self._draft is None:
+            raise ValueError(
+                "spec mode 'draft' needs a draft_model (a reduced config "
+                "from repro.configs — see ModelConfig.reduced())")
+        if self.default_spec.mode != "off":
+            self._check_spec_model(model.cfg)
         #: policy for requests that carry no SamplingParams of their own:
         #: ``greedy=True`` is argmax (temperature 0); ``greedy=False``
         #: samples the raw softmax (temperature 1).
@@ -158,6 +189,9 @@ class ServingEngine:
                 cfg.vocab))
         self.scheduler.eos_id = None if eos_id < 0 else eos_id
         self.scheduler.chunk_supported = cfg.attention_only
+        # replans feed the observed acceptance rate through serve_schedule
+        # and adopt its planned spec_k (requests with k=None use it)
+        self.scheduler.spec_mode = self.default_spec.mode
         # a pinned mode stays pinned; auto engines let serve_schedule
         # switch batched<->chunked from observed stats (never paged ones:
         # the pool cannot execute a one-shot batched prefill)
@@ -174,6 +208,20 @@ class ServingEngine:
         self._chunk_step = jits["chunk"]
         self._reset_rows = jits["reset"]
         self._sample_step = jits["sample"]
+        self._verify = jits["verify"]
+        self._rollback = jits["rollback"]
+        self._sample_grid_step = jits["sample_grid"]
+
+    @staticmethod
+    def _check_spec_model(cfg) -> None:
+        """Speculative decoding rewinds the KV cache by position, which
+        only a full-attention family supports (recurrent state cannot be
+        rolled back; a sliding-window ring conflates position and slot)."""
+        if not cfg.attention_only or cfg.sliding_window:
+            raise ValueError(
+                "speculative decoding needs a full-attention family, not "
+                f"{cfg.family}"
+                + (" with a sliding window" if cfg.sliding_window else ""))
 
     # -- paged KV -------------------------------------------------------------
     def _init_paged_kv(self, block_size: int | None,
@@ -257,6 +305,25 @@ class ServingEngine:
 
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        rspec = req.spec if req.spec is not None else self.default_spec
+        if rspec.mode != "off":
+            self._check_spec_model(self.model.cfg)
+            if rspec.mode == "draft" and self._draft is None:
+                raise ValueError(
+                    f"request {req.rid} wants spec mode 'draft' but the "
+                    "engine holds no draft model")
+            if self.pool is None \
+                    and len(req.prompt) + req.max_new_tokens > self.max_len:
+                # rollback rewinds the dense ring by absolute position,
+                # which a wrapped ring has overwritten — a speculative
+                # request must fit the horizon (the paged pool enforces
+                # the same bound below for every request)
+                raise ValueError(
+                    f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                    f"max_new_tokens ({req.max_new_tokens}) exceeds the "
+                    f"{self.max_len}-token horizon; a speculative request "
+                    "cannot wrap the dense KV ring (its rollback rewinds "
+                    "by position)")
         if self.pool is not None \
                 and len(req.prompt) + req.max_new_tokens > self.max_len:
             # the paged horizon is exact: a context past max_len has no
@@ -292,8 +359,15 @@ class ServingEngine:
             with self.timer.stage("prefill_chunk"):
                 produced += self._prefill_chunks(plan)
         if plan.decode_slots:
-            with self.timer.stage("decode"):
-                produced += self._decode(plan)
+            drafts = self._plan_drafts(plan)
+            if drafts:
+                with self.timer.stage("verify"):
+                    produced += self._decode_verify(plan, drafts)
+            else:
+                # no slot drafted this tick: the plain one-token decode
+                # dispatch, exactly as a spec=off engine would run it
+                with self.timer.stage("decode"):
+                    produced += self._decode(plan)
         self._maybe_replan()
         return produced
 
@@ -410,6 +484,149 @@ class ServingEngine:
             self.scheduler.note_prefilled(a.sreq, a.n_new, first)
         return produced
 
+    # -- speculative decode ---------------------------------------------------
+    def _resolve_spec(self, sreq) -> tuple[SpecParams, int]:
+        """A request's effective spec policy and draft length: its own
+        SpecParams (or the engine default); ``k=None`` takes the
+        serve_schedule-planned ``spec_k`` (mid-range 4 before any plan)."""
+        sp = sreq.req.spec if sreq.req.spec is not None else self.default_spec
+        if sp.mode == "off":
+            return sp, 0
+        k = sp.k
+        if k is None:
+            k = self.scheduler.cfg.spec_k
+            if k is None:
+                k = 4
+        return sp, min(int(k), self._spec_k_max)
+
+    def _plan_drafts(self, plan: TickPlan) -> dict[int, np.ndarray]:
+        """Propose draft tokens per decode slot.  Empty dict = nobody
+        drafted, the tick falls through to the plain decode path.
+
+        The per-row draft length is clamped so a verify can never
+        over-commit or over-write: at most ``remaining - 1`` drafts (the
+        verify's bonus token then lands exactly on the budget) and at most
+        ``max_len - 1 - L`` (every write stays inside the horizon — the
+        dense ring must not wrap, the paged lease covers exactly the
+        horizon)."""
+        out: dict[int, np.ndarray] = {}
+        draft_rows: list[tuple[int, int, np.ndarray, int]] = []
+        for slot in plan.decode_slots:
+            sreq = self.scheduler.active[slot]
+            sp, k = self._resolve_spec(sreq)
+            if k <= 0:
+                continue
+            req = sreq.req
+            remaining = req.max_new_tokens - len(req.generated)
+            cache_len = len(req.prompt) + len(req.generated) - 1
+            k = min(k, remaining - 1, self.max_len - 1 - cache_len)
+            if k <= 0:
+                continue
+            context = np.concatenate(
+                [np.asarray(req.prompt, np.int64),
+                 np.asarray(req.generated, np.int64)])
+            if sp.mode == "ngram":
+                d = self._ngram.propose(context, k, sp)
+                if len(d):
+                    out[slot] = d
+            else:
+                draft_rows.append((slot, req.rid, context, k))
+        if draft_rows:
+            for slot, d in self._draft.propose(draft_rows).items():
+                if len(d):
+                    out[slot] = d
+        return out
+
+    def _decode_verify(self, plan: TickPlan, drafts: dict[int, np.ndarray]
+                       ) -> int:
+        """One verify dispatch for the whole decode set: each drafting row
+        scores ``[pending, d_1..d_k]`` in one fused forward, non-drafting
+        rows ride along with one position.  Commit the longest prefix
+        whose drafts match the target's keyed samples (the Leviathan rule
+        for point-mass drafts — see ``repro.serving.speculative``), plus
+        the bonus token at the first mismatch; rejected suffix writes roll
+        back, so the caches end bit-identical to a plain decode history."""
+        B = self.slots
+        K1 = 1 + max(len(d) for d in drafts.values())
+        toks = np.zeros((B, K1), np.int32)
+        n_new = np.zeros((B,), np.int32)
+        rows: list = [None] * B
+        pre_len = np.zeros((B,), np.int64)
+        last = np.asarray(self._last_tokens)[:, 0]
+        for slot in plan.decode_slots:
+            sreq = self.scheduler.active[slot]
+            rows[slot] = sreq
+            d = drafts.get(slot)
+            toks[slot, 0] = last[slot]
+            if d is not None:
+                toks[slot, 1:1 + len(d)] = d
+            n_new[slot] = 1 + (len(d) if d is not None else 0)
+            # context tokens cached before this tick: prompt + emitted - 1
+            # (the newest emitted token is still pending, never written)
+            pre_len[slot] = (len(sreq.req.prompt)
+                             + len(sreq.req.generated) - 1)
+        logits, self.caches = self._verify(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(n_new))
+        targets = self._sample_grid(logits, rows)
+        self.spec_stats.verify_calls += 1
+        self.spec_stats.verify_positions += int(n_new.sum())
+
+        produced = 0
+        keep_len = np.zeros((B,), np.int32)
+        rollback = np.zeros((B,), bool)
+        for slot in plan.decode_slots:
+            sreq = rows[slot]
+            d = drafts.get(slot, np.zeros((0,), np.int32))
+            n = 1 + len(d)
+            commits = 0
+            for i in range(n):
+                t = int(targets[slot, i])
+                self.tokens_out += 1
+                self._decode_tokens += 1
+                self._last_tokens = self._last_tokens.at[slot, 0].set(t)
+                self.scheduler.note_decoded(slot, t)
+                commits += 1
+                produced += 1
+                if sreq.req.done:
+                    break           # EOS/budget retired mid-commit
+                if i < len(d) and int(d[i]) != t:
+                    break           # first rejected draft: t is the bonus
+            self.spec_stats.drafts_proposed += len(d)
+            self.spec_stats.drafts_accepted += commits - 1
+            self.spec_stats.spec_tokens += commits
+            if commits < n:
+                keep_len[slot] = pre_len[slot] + commits
+                rollback[slot] = True
+        if rollback.any():
+            self.caches = self._rollback(
+                self.caches, jnp.asarray(keep_len), jnp.asarray(rollback))
+        if self.pool is not None:
+            self._spec_truncate_leases(plan, rows)
+        return produced
+
+    def _spec_truncate_leases(self, plan: TickPlan, rows: list) -> None:
+        """Paged rollback, pool side: a decoding request can never need
+        blocks past ``prompt + max_new - 1`` context tokens (the last
+        emitted token is never fed back), so strandable tail blocks of
+        the lease go back to the pool and the device block-table row
+        forgets them."""
+        kv = self.caches.kv
+        bt = kv.block_tables
+        changed = False
+        for slot in plan.decode_slots:
+            sreq = rows[slot]
+            rid = sreq.req.rid
+            if sreq.req.done or not self.pool.holds(rid):
+                continue
+            needed = len(sreq.req.prompt) + sreq.req.max_new_tokens - 1
+            if self.pool.truncate(rid, needed):
+                bt = bt.at[:, slot].set(
+                    jnp.asarray(self.pool.block_table(rid)))
+                changed = True
+        if changed:
+            self.caches = self.caches._replace(
+                kv=kv._replace(block_tables=bt))
+
     # -- decode ---------------------------------------------------------------
     def _decode(self, plan: TickPlan) -> int:
         live = np.zeros((self.slots,), bool)
@@ -461,18 +678,57 @@ class ServingEngine:
                                  jnp.asarray(ks), jnp.asarray(ps))
         return np.asarray(jax.block_until_ready(toks))
 
+    def _sample_grid(self, logits: jax.Array, rows) -> np.ndarray:
+        """Verify-tick sampling over ``(B, K1, V)`` logits: position ``i``
+        of row ``b`` uses key ``(seed_b, emitted_b + i)`` — the same keys
+        the plain decode path would use emitting those tokens one tick at
+        a time (``sample_token_grid``), which is what makes speculative
+        sampled streams identical, not merely equal in distribution."""
+        B = int(logits.shape[0])
+        seeds = np.zeros((B,), np.uint32)
+        steps = np.zeros((B,), np.int32)
+        temps = np.zeros((B,), np.float32)
+        ks = np.zeros((B,), np.int32)
+        ps = np.ones((B,), np.float32)
+        for i, sreq in enumerate(rows):
+            if sreq is None:
+                continue
+            sp = sreq.req.sampling or self.default_sampling
+            seeds[i] = np.uint32(sp.seed & 0xFFFFFFFF)
+            steps[i] = len(sreq.req.generated)
+            temps[i] = sp.temperature
+            ks[i] = sp.top_k
+            ps[i] = sp.top_p
+        if not temps.any():
+            toks = jnp.argmax(logits[..., :self.model.cfg.vocab],
+                              axis=-1).astype(jnp.int32)
+            return np.asarray(jax.block_until_ready(toks))
+        toks = self._sample_grid_step(logits, jnp.asarray(seeds),
+                                      jnp.asarray(steps), jnp.asarray(temps),
+                                      jnp.asarray(ks), jnp.asarray(ps))
+        return np.asarray(jax.block_until_ready(toks))
+
     # -- re-planning / stats --------------------------------------------------
     def _maybe_replan(self) -> None:
         import time
-        decode = self.timer.totals.get("decode", 0.0)
-        decode_calls = self.timer.counts.get("decode", 0)
+        # verify dispatches are the spec engine's decode steps: fold them
+        # in so a mostly-speculative workload still produces decode stats
+        decode = (self.timer.totals.get("decode", 0.0)
+                  + self.timer.totals.get("verify", 0.0))
+        decode_calls = (self.timer.counts.get("decode", 0)
+                        + self.timer.counts.get("verify", 0))
         prefill_s = (self.timer.totals.get("prefill_chunk", 0.0)
                      + self.timer.totals.get("admit", 0.0))
+        accept = None
+        if self.default_spec.mode != "off" \
+                and self.spec_stats.drafts_proposed:
+            accept = self.spec_stats.accept_rate
         t0 = time.perf_counter()
         plan = self.scheduler.maybe_replan(
             decode_step_s=decode / decode_calls if decode_calls else 0.0,
             prefill_token_s=prefill_s / self._prefill_tokens
-            if self._prefill_tokens else 0.0)
+            if self._prefill_tokens else 0.0,
+            accept_rate=accept)
         if plan is not None:  # record only ticks that actually re-planned
             dt = time.perf_counter() - t0
             self.timer.totals["replan"] = \
@@ -496,7 +752,27 @@ class ServingEngine:
         if rep is not None:
             out["plan_report"] = rep.as_dict()
             out["plan_cache_hit"] = rep.cache_hit
-        decode = out["stages"].get("decode")
-        if decode and decode["total_s"] > 0:
-            out["decode_tokens_per_s"] = self._decode_tokens / decode["total_s"]
+        if self.default_spec.mode != "off":
+            out["spec"] = {"mode": self.default_spec.mode,
+                           "k": self._resolve_spec_k_for_stats(),
+                           **self.spec_stats.as_dict()}
+        # decode throughput counts *committed* tokens only over the decode
+        # + verify wall time — draft positions the verify scored but the
+        # target rejected are never emissions (see launch/serve.py)
+        decode_s = sum(out["stages"].get(s, {"total_s": 0.0})["total_s"]
+                       for s in ("decode", "verify"))
+        if decode_s > 0:
+            out["decode_tokens_per_s"] = self._decode_tokens / decode_s
         return out
+
+    def _resolve_spec_k_for_stats(self) -> int | None:
+        """The draft length currently in effect for default-spec requests
+        (the planned value once serve_schedule has produced one)."""
+        if self.default_spec.mode == "off":
+            return None
+        k = self.default_spec.k
+        if k is None:
+            k = self.scheduler.cfg.spec_k
+            if k is None:
+                k = 4
+        return min(int(k), self._spec_k_max)

@@ -293,6 +293,39 @@ class KVBlockPool:
                 else:
                     self.free_list.append(b)
 
+    def truncate(self, rid: int, n_tokens: int) -> int:
+        """Shrink a lease to ``blocks_for(n_tokens)`` blocks, freeing the
+        strandable tail — the speculative-decode rollback hook: after a
+        rejected draft suffix the request's reachable horizon shrinks
+        (context + remaining budget), so blocks past it can go back to the
+        pool.  Never cuts into shared or registered prefix blocks (those
+        hold prefill-written content other requests may probe — a
+        ``PoolError`` guards the boundary).  Tail blocks are private by
+        construction (only full *prefill* blocks ever register or share),
+        so freed ones return straight to the free list.  Returns the
+        number of blocks freed."""
+        lease = self.leases.get(rid)
+        if lease is None:
+            raise PoolError(f"truncate: request {rid} holds no lease")
+        keep = self.blocks_for(n_tokens)
+        floor = max(lease.shared_blocks, lease.registered)
+        if keep < floor:
+            raise PoolError(
+                f"truncate: request {rid} would drop to {keep} blocks, "
+                f"below its {floor}-block shared/registered prefix")
+        freed = 0
+        while len(lease.blocks) > keep:
+            b = lease.blocks.pop()
+            if self.refcount[b] != 1:
+                lease.blocks.append(b)
+                raise PoolError(
+                    f"truncate: tail block {b} of request {rid} is shared "
+                    f"(refcount {int(self.refcount[b])})")
+            self.refcount[b] = 0
+            self.free_list.append(b)
+            freed += 1
+        return freed
+
     # -- introspection ------------------------------------------------------
     def block_table(self, rid: int) -> np.ndarray:
         """The request's block table row, -1-padded to the table width."""

@@ -101,3 +101,25 @@ def sample_tokens(logits, seeds, steps, temperature, top_k, top_p, *,
     rows = logits[..., :vocab].astype(jnp.float32)
     return jax.vmap(_sample_one)(rows, seeds, steps, temperature, top_k,
                                  top_p)
+
+
+def sample_token_grid(logits, seeds, steps, temperature, top_k, top_p, *,
+                      vocab: int):
+    """Speculative-verify sampling: ``(B, K1, V) -> (B, K1)`` tokens.
+
+    Row ``b``, position ``i`` samples with key ``(seeds[b], steps[b] + i)``
+    — exactly the key the non-speculative engine would use once its first
+    ``i`` tokens were emitted.  That per-row/per-step key derivation (not
+    batch shape) is the whole PRNG contract, so flattening the grid
+    through :func:`sample_tokens` commits the engine to the *same* sampled
+    stream whether a token arrives via a plain decode step or a verify
+    position — the property the speculative equivalence tests pin down.
+    """
+    B, K1 = logits.shape[0], logits.shape[1]
+    grid_steps = (steps[:, None] + jnp.arange(K1, dtype=steps.dtype)[None, :])
+    toks = sample_tokens(
+        logits.reshape(B * K1, logits.shape[2]),
+        jnp.repeat(seeds, K1), grid_steps.reshape(-1),
+        jnp.repeat(temperature, K1), jnp.repeat(top_k, K1),
+        jnp.repeat(top_p, K1), vocab=vocab)
+    return toks.reshape(B, K1)

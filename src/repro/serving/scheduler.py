@@ -120,6 +120,10 @@ class SchedulerConfig:
     admit: int | None = None
     #: per-tick preemption cap; replaced by the plan's ``preempt``.
     preempt: int = 1
+    #: planned speculative draft length for requests whose SpecParams leave
+    #: ``k = None``; set by the serve_schedule plan from the observed
+    #: acceptance rate (0 = speculation planned off).  None = no plan yet.
+    spec_k: int | None = None
 
 
 def _quantize(x: float) -> float:
@@ -151,6 +155,10 @@ class Scheduler:
         #: "dense" or "paged" — forwarded to the serve_schedule pass so a
         #: paged engine's replans keep the kv pool fields in the plan.
         self.kv_mode = "dense"
+        #: speculative-decoding mode the engine runs ("off"|"ngram"|"draft")
+        #: — forwarded to the serve_schedule pass so replans plan ``spec_k``
+        #: from the observed acceptance rate.
+        self.spec_mode = "off"
         #: paged-KV hooks, set by the engine when it runs a block pool:
         #: ``kv_gate(sreq, victim=None)`` — may this request be admitted
         #: given free blocks (counting the victim's, when preempting)?;
@@ -364,12 +372,15 @@ class Scheduler:
 
     # -- re-planning through the pass manager ---------------------------------
     def maybe_replan(self, decode_step_s: float, prefill_token_s: float,
-                     device=None) -> dict[str, Any] | None:
+                     device=None,
+                     accept_rate: float | None = None) -> dict[str, Any] | None:
         """Every ``replan_every`` ticks: run the ``serve_schedule`` pass over
         the proxy graph with quantized observed timings and adopt its plan —
         chunk budget, admission width, preemption bound, replan period, and
-        (unless pinned) the batched-vs-chunked prefill mode.  Returns the
-        plan on replan ticks, None otherwise."""
+        (unless pinned) the batched-vs-chunked prefill mode.  A speculative
+        engine also feeds its observed draft ``accept_rate`` (None = no
+        drafts verified yet) and adopts the planned ``spec_k``.  Returns
+        the plan on replan ticks, None otherwise."""
         if self.plan_graph is None or self._ticks % self.cfg.replan_every:
             return None
         from repro.core import pipeline  # serving depends on core, not back
@@ -390,6 +401,12 @@ class Scheduler:
         }
         if self.kv_mode != "dense":
             options["kv"] = self.kv_mode
+        if self.spec_mode != "off":
+            options["spec"] = self.spec_mode
+            # -1 = no verified drafts yet: the pass starts optimistic and
+            # the first real rate takes over at the next replan
+            options["spec_accept_rate"] = (
+                _quantize(accept_rate) if accept_rate is not None else -1.0)
         _, report = pipeline.optimize(self.plan_graph, device,
                                       passes=("serve_schedule",),
                                       options=options)
@@ -406,6 +423,8 @@ class Scheduler:
                                max(self.cfg.slots - 1, 0))
         self.cfg.replan_every = max(1, int(plan.get("replan_every",
                                                     self.cfg.replan_every)))
+        if "spec_k" in plan:
+            self.cfg.spec_k = int(plan["spec_k"])
         self.last_plan = plan
         self.last_report = report
         return plan

@@ -190,6 +190,105 @@ def test_victim_credit_excludes_candidate_shared_blocks():
     p.check_invariants()
 
 
+def test_truncate_frees_partial_tail_blocks():
+    """The speculative-rollback hook: shrinking the reachable horizon
+    returns the strandable tail blocks (including a partially-filled one)
+    straight to the free list."""
+    p = _pool()
+    p.allocate(0, _toks(*range(10)), horizon=14)    # 4 blocks (bs=4)
+    assert p.available() == 12
+    freed = p.truncate(0, 10)                       # blocks_for(10) == 3
+    assert freed == 1 and p.available() == 13
+    assert p.blocks_held(0) == 3
+    assert list(p.block_table(0)[3:]) == [-1] * 5   # table row shrank
+    p.check_invariants()
+    assert p.truncate(0, 10) == 0                   # idempotent
+    assert p.truncate(0, 12) == 0                   # same block count
+    p.check_invariants()
+    p.free(0)
+    assert p.available() == 16
+    p.check_invariants()
+
+
+def test_truncate_never_cuts_registered_prefix():
+    """Registered full prefill blocks hold content later requests may
+    probe — truncate must refuse to drop below them."""
+    p = _pool()
+    p.allocate(0, _toks(*range(11)), horizon=16)    # 4 blocks
+    p.note_prefilled(0, 11)                         # registers 2 full blocks
+    with pytest.raises(PoolError, match="shared/registered"):
+        p.truncate(0, 4)                            # 1 block < 2 registered
+    assert p.truncate(0, 8) == 2                    # exactly the floor: ok
+    assert p.blocks_held(0) == 2
+    p.check_invariants()
+
+
+def test_truncate_never_cuts_shared_prefix():
+    """A sharer's lease floor is its shared-prefix block count even though
+    it registered nothing itself."""
+    p = _pool()
+    prompt = _toks(*range(11))
+    p.allocate(0, prompt, horizon=11)
+    p.note_prefilled(0, 11)
+    _, cached = p.allocate(1, prompt, horizon=16)   # shares 2 blocks
+    assert cached == 8
+    with pytest.raises(PoolError, match="shared/registered"):
+        p.truncate(1, 4)
+    freed = p.truncate(1, 11)                       # drop the horizon slack
+    assert freed == 1 and len(p.leases[1].blocks) == 3
+    # the shared blocks still serve both leases
+    assert p.refcount[p.leases[0].blocks[0]] == 2
+    p.check_invariants()
+    p.free(0)
+    p.free(1)
+    p.check_invariants()
+
+
+def test_truncate_requires_a_lease():
+    p = _pool()
+    with pytest.raises(PoolError, match="no lease"):
+        p.truncate(5, 4)
+
+
+def test_randomized_truncate_invariants():
+    """Mini-fuzz of the speculative accept/reject lifecycle: allocate,
+    prefill, repeatedly truncate to random reachable horizons, free —
+    re-derived accounting must hold after every operation."""
+    rng = np.random.default_rng(1)
+    p = _pool(bs=4, blocks=12, max_blocks=4)
+    live: list[int] = []
+    rid = 0
+    prefixes = [rng.integers(0, 50, 8).astype(np.int32) for _ in range(2)]
+    for _ in range(400):
+        op = rng.random()
+        if op < 0.4:
+            base = prefixes[int(rng.integers(0, 2))]
+            tail = rng.integers(0, 50, int(rng.integers(1, 6))).astype(np.int32)
+            toks = np.concatenate([base[:int(rng.integers(0, 9))], tail])
+            horizon = len(toks) + int(rng.integers(0, 6))
+            if p.blocks_for(horizon) <= p.cfg.max_blocks_per_seq \
+                    and p.can_admit(toks, horizon):
+                _, cached = p.allocate(rid, toks, horizon)
+                p.note_prefilled(rid, int(rng.integers(cached, len(toks) + 1)))
+                live.append(rid)
+                rid += 1
+        elif op < 0.8 and live:
+            r = int(rng.choice(live))
+            lease = p.leases[r]
+            floor = max(lease.shared_blocks, lease.registered, 1)
+            keep = int(rng.integers(floor, max(len(lease.blocks), floor) + 1))
+            freed = p.truncate(r, keep * p.cfg.block_size)
+            assert freed == 0 or len(p.leases[r].blocks) == keep
+        elif live:
+            r = live.pop(int(rng.integers(0, len(live))))
+            p.free(r)
+        p.check_invariants()
+    for r in live:
+        p.free(r)
+    p.check_invariants()
+    assert p.available() == p.cfg.pool_blocks
+
+
 def test_randomized_accounting_equivalence():
     """Mini-fuzz over alloc/free/note_prefilled: after every operation the
     re-derived accounting (refcounts from leases, free/cached/leased

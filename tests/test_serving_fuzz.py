@@ -1,4 +1,5 @@
-"""Randomized serving-equivalence harness: paged KV == dense KV.
+"""Randomized serving-equivalence harness: paged KV == dense KV, and
+speculative decoding == plain decoding.
 
 The oracle property: the block-paged engine (``kv="paged"``) must produce
 **bit-identical** per-request outputs to the dense ring-buffer engine on
@@ -9,6 +10,17 @@ retirement, and block-gated admission from an undersized pool.  Greedy
 traces must match exactly, and seeded *sampled* streams must match too
 (the sampler keys on ``(seed, emitted count)`` only, so bit-equal logits
 imply bit-equal samples).
+
+The **speculative axis** widens the oracle: every seeded trace replays a
+third and fourth time with self-drafting n-gram speculation enabled
+(``spec="ngram"``, dense *and* paged), and a smoke subset replays with a
+small draft model as proposer.  All spec replays must emit streams
+bit-identical to the non-speculative dense baseline — greedy and seeded
+sampled alike — because acceptance is the exact-match coupling of the
+Leviathan rule (``serving/speculative.py``): every committed token is
+literally the target's keyed sample.  Pool invariants are re-checked
+after every tick of every replay, so accept/rollback/truncate churn runs
+under the same accounting oracle as plain serving.
 
 Two drivers for one trace runner:
 
@@ -31,7 +43,7 @@ import jax
 
 from repro.configs.base import ModelConfig
 from repro.models.model import Model
-from repro.serving import Request, SamplingParams, ServingEngine
+from repro.serving import Request, SamplingParams, ServingEngine, SpecParams
 
 try:
     from hypothesis import HealthCheck, given, settings
@@ -50,11 +62,34 @@ CFG = ModelConfig(name="fuzz-tiny", family="dense", n_layers=2, d_model=64,
                   vocab=96, n_heads=4, n_kv_heads=2, d_ff=128,
                   dtype="float32", param_dtype="float32")
 
+#: the draft proposer for the draft-model smoke subset — same vocab as the
+#: target (its argmax must index the same token space) but otherwise
+#: smaller, and initialized from a *different* key so its guesses disagree
+#: with the target often: the rejection/rollback path gets real traffic.
+DRAFT_CFG = dataclasses.replace(CFG, name="fuzz-draft", n_layers=1,
+                                d_model=32, n_heads=2, n_kv_heads=1, d_ff=64)
+
+#: spec replays use a small k ceiling so the dynamic verify width K1 stays
+#: in a tiny closed set ({2..5}) and the module compiles a bounded number
+#: of verify graphs.
+SPEC_K_MAX = 4
+
+#: module-wide acceptance accounting across every spec replay, reported by
+#: ``tools/spec_fuzz_summary.py`` in the CI fuzz leg.
+SPEC_TOTALS = {"proposed": 0, "accepted": 0, "verify_calls": 0,
+               "spec_tokens": 0}
+
 
 @pytest.fixture(scope="module")
 def fuzz_model():
     m = Model(CFG)
     return m, m.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def draft_model():
+    m = Model(DRAFT_CFG)
+    return m, m.init(jax.random.key(7))
 
 
 # -- trace generation ---------------------------------------------------------
@@ -117,13 +152,20 @@ def make_trace(seed: int, sampled: bool) -> Trace:
 
 # -- trace execution ----------------------------------------------------------
 
-def run_trace(model, params, trace: Trace, kv: str) -> list[list[int]]:
+def run_trace(model, params, trace: Trace, kv: str,
+              spec: SpecParams | None = None,
+              draft=None) -> list[list[int]]:
+    spec_kw = {}
+    if spec is not None:
+        spec_kw = dict(spec=spec, spec_k_max=SPEC_K_MAX)
+        if draft is not None:
+            spec_kw.update(draft_model=draft[0], draft_params=draft[1])
     eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
                         chunk=CHUNK, prefill_mode="chunked",
                         replan_every=10_000, eos_id=trace.eos_id, kv=kv,
                         kv_block_size=BLOCK if kv == "paged" else None,
                         kv_pool_blocks=trace.pool_blocks
-                        if kv == "paged" else None)
+                        if kv == "paged" else None, **spec_kw)
     reqs = []
     for rid, ev in enumerate(trace.events):
         for _ in range(ev.gap):
@@ -149,30 +191,66 @@ def run_trace(model, params, trace: Trace, kv: str) -> list[list[int]]:
         eng.pool.check_invariants()
         assert eng.pool.stats()["live_requests"] == 0
         assert eng.pool.stats()["blocks_in_use"] == 0
+    if spec is not None:
+        SPEC_TOTALS["proposed"] += eng.spec_stats.drafts_proposed
+        SPEC_TOTALS["accepted"] += eng.spec_stats.drafts_accepted
+        SPEC_TOTALS["verify_calls"] += eng.spec_stats.verify_calls
+        SPEC_TOTALS["spec_tokens"] += eng.spec_stats.spec_tokens
     return [list(r.generated) for r in reqs]
 
 
-def assert_equivalent(model, params, trace: Trace) -> None:
+def assert_equivalent(model, params, trace: Trace, draft=None) -> None:
+    """The full oracle for one trace: paged == dense, and every spec
+    replay (n-gram by default, the draft model when given) == the
+    non-speculative dense baseline, bit for bit."""
     dense = run_trace(model, params, trace, "dense")
     paged = run_trace(model, params, trace, "paged")
     assert dense == paged, (
         f"paged/dense divergence: dense={dense} paged={paged}")
+    mode = "draft" if draft is not None else "ngram"
+    # min_ngram=1 matches aggressively: on random-weight traces most
+    # drafts get *rejected*, which is the point — the replay hammers the
+    # verify/rollback/truncate path while the outputs must stay identical
+    spec = SpecParams(mode=mode, k=3, min_ngram=1)
+    for kv in ("dense", "paged"):
+        got = run_trace(model, params, trace, kv, spec=spec, draft=draft)
+        assert got == dense, (
+            f"speculative divergence ({mode}, kv={kv}): "
+            f"baseline={dense} spec={got}")
 
 
 # -- the randomized sweeps (run in every environment) -------------------------
 
 @pytest.mark.parametrize("seed", range(N_GREEDY))
 def test_greedy_trace_equivalence(fuzz_model, seed):
-    """Greedy outputs bit-identical between paged and dense engines."""
+    """Greedy outputs bit-identical across paged/dense engines and their
+    n-gram speculative replays."""
     model, params = fuzz_model
     assert_equivalent(model, params, make_trace(seed, sampled=False))
 
 
 @pytest.mark.parametrize("seed", range(10_000, 10_000 + N_SAMPLED))
 def test_sampled_trace_equivalence(fuzz_model, seed):
-    """Seeded sampled streams identical between paged and dense engines."""
+    """Seeded sampled streams identical across paged/dense engines and
+    their n-gram speculative replays (the Leviathan-coupling property)."""
     model, params = fuzz_model
     assert_equivalent(model, params, make_trace(seed, sampled=True))
+
+
+#: draft-model smoke subset: enough traces to exercise accept *and*
+#: reject/rollback with a real second model, small enough not to dominate
+N_DRAFT = max(N_GREEDY // 7, 2)
+
+
+@pytest.mark.parametrize("seed", range(20_000, 20_000 + N_DRAFT))
+def test_draft_model_trace_equivalence(fuzz_model, draft_model, seed):
+    """Draft-model speculation: outputs bit-identical to the plain dense
+    baseline even though the reduced draft model frequently disagrees
+    with the target (rejection/rollback takes real traffic)."""
+    model, params = fuzz_model
+    assert_equivalent(model, params,
+                      make_trace(seed, sampled=bool(seed % 2)),
+                      draft=draft_model)
 
 
 # -- the hypothesis layer (CI: shrinks failures to minimal traces) ------------
@@ -399,3 +477,51 @@ def test_preemption_decode_restore_uses_prefix_cache(fuzz_model):
     assert outs["dense"] == outs["paged"]
     # the restore shared the prompt's two full 8-token blocks
     assert saved["paged"] >= 16
+
+
+def test_mixed_per_request_spec_matches_baseline(fuzz_model):
+    """Per-request ``SpecParams`` in one batch — speculation off, an
+    *oracle* draft model (the target serving as its own draft, so its
+    greedy guesses are always accepted), and an aggressive n-gram lookup
+    on a sampled request (mostly rejected) — all emit the baseline
+    streams on both KV layouts, and both the acceptance and the rejection
+    path really fired."""
+    model, params = fuzz_model
+    rng = np.random.default_rng(42)
+    prompts = [rng.integers(0, CFG.vocab, 12).astype(np.int32),
+               rng.integers(0, CFG.vocab, 17).astype(np.int32),
+               rng.integers(0, CFG.vocab, 8).astype(np.int32)]
+    specs = [SpecParams(mode="off", k=0),
+             SpecParams(mode="draft", k=4),
+             SpecParams(mode="ngram", k=2, min_ngram=1)]
+    samplings = [None, None,
+                 SamplingParams(temperature=0.8, top_k=12, seed=99)]
+
+    def run(kv, with_spec):
+        eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                            chunk=CHUNK, prefill_mode="chunked",
+                            replan_every=10_000, kv=kv,
+                            kv_block_size=BLOCK if kv == "paged" else None,
+                            kv_pool_blocks=16 if kv == "paged" else None,
+                            spec_k_max=SPEC_K_MAX,
+                            draft_model=model, draft_params=params)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new_tokens=8,
+                        sampling=samplings[i],
+                        spec=specs[i] if with_spec else None)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        while eng.scheduler.pending():
+            eng.step()
+            if eng.pool is not None:
+                eng.pool.check_invariants()
+        return [list(r.generated) for r in reqs], eng.spec_stats
+
+    baseline, _ = run("dense", with_spec=False)
+    for kv in ("dense", "paged"):
+        got, stats = run(kv, with_spec=True)
+        assert got == baseline, f"mixed-spec divergence on {kv}"
+        # the oracle draft's greedy guesses are the target's greedy picks
+        assert stats.drafts_accepted > 0
+        # and the aggressive lookup on random text got drafts rejected
+        assert stats.drafts_accepted < stats.drafts_proposed

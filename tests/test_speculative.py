@@ -1,0 +1,404 @@
+"""Unit + property tests for speculative decoding primitives.
+
+Four layers, matching the guarantees ``serving/speculative.py`` makes:
+
+* **proposer units** — ``propose_ngram`` longest-suffix priority, the
+  full-continuation preference, and the degenerate contexts (empty,
+  too-short, single repeated token);
+* **acceptance statistics** — committed tokens come from the target's
+  keyed sampler, so over many seeds their empirical distribution must
+  match the target softmax, and a point-mass draft must be accepted with
+  probability ``p_target(draft)`` — the Leviathan rule specialized to
+  deterministic proposers;
+* **rollback** — after a verify writes rejected draft positions,
+  ``rollback_cache_rows`` must leave the cache *behaviorally* identical
+  to one that never saw them: the next decode's logits are compared
+  bitwise, dense and paged;
+* **the k=0 / no-proposal path** — a speculative engine that never
+  drafts must run the plain decode dispatch (zero verify calls) and emit
+  exactly the spec=off streams.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.pipeline import SERVE_SPEC_KS, _plan_spec_k
+from repro.models.model import Model
+from repro.serving import (Request, SamplingParams, ServingEngine,
+                           SpecParams, propose_ngram)
+from repro.serving.sampling import sample_token_grid, sample_tokens
+from repro.serving.speculative import SPEC_OFF, DraftModelProposer, SpecStats
+
+CFG = ModelConfig(name="spec-tiny", family="dense", n_layers=2, d_model=64,
+                  vocab=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                  dtype="float32", param_dtype="float32")
+SLOTS, MAX_LEN, CHUNK = 2, 48, 8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    m = Model(CFG)
+    return m, m.init(jax.random.key(0))
+
+
+# -- propose_ngram units ------------------------------------------------------
+
+def test_ngram_copies_continuation_of_most_recent_match():
+    # context ...[7 8] 1 2 ... [7 8] -> the earlier [7 8] continues 1 2
+    ctx = np.array([5, 7, 8, 1, 2, 6, 7, 8], np.int32)
+    assert propose_ngram(ctx, 2).tolist() == [1, 2]
+
+
+def test_ngram_prefers_longest_suffix():
+    # the 3-gram [1 2 3] recurs (continues 9); the 2-gram [2 3] also
+    # recurs later (continues 4) — the longer match must win
+    ctx = np.array([1, 2, 3, 9, 2, 3, 4, 1, 2, 3], np.int32)
+    assert propose_ngram(ctx, 1, max_ngram=3).tolist() == [9]
+
+
+def test_ngram_prefers_match_with_full_continuation():
+    # periodic text: the most recent suffix match ends at the context's
+    # edge with only 1 token after it; the earlier occurrence has the
+    # whole k=3 continuation and must be chosen instead
+    ctx = np.tile(np.array([1, 2, 3], np.int32), 4)  # 1 2 3 x4
+    d = propose_ngram(ctx, 3)
+    assert d.tolist() == [1, 2, 3]
+
+
+def test_ngram_falls_back_to_partial_tail_when_no_full_match():
+    # [5 6] occurs once earlier, right before the end: only a 1-token
+    # continuation exists; a too-short draft beats no draft
+    ctx = np.array([0, 5, 6, 9, 5, 6], np.int32)
+    d = propose_ngram(ctx, 4)
+    assert d.tolist() == [9, 5, 6]  # starts after the earlier [5 6]
+
+
+def test_ngram_degenerate_contexts():
+    assert propose_ngram(np.zeros((0,), np.int32), 4).size == 0  # empty
+    assert propose_ngram(np.array([1], np.int32), 4).size == 0   # too short
+    assert propose_ngram(np.array([1, 2, 3], np.int32), 0).size == 0  # k=0
+    # no earlier occurrence of the suffix
+    assert propose_ngram(np.array([1, 2, 3, 4], np.int32), 2).size == 0
+
+
+def test_ngram_single_repeated_token_prompt():
+    # the pathological all-same context: every window matches, and the
+    # draft is just more of the same token — never an index error
+    ctx = np.full((12,), 7, np.int32)
+    d = propose_ngram(ctx, 5)
+    assert d.tolist() == [7] * 5
+
+
+def test_ngram_respects_min_ngram():
+    # only a 1-gram matches; with the default min_ngram=2 nothing fires,
+    # with min_ngram=1 the continuation is proposed
+    ctx = np.array([4, 1, 9, 2, 4], np.int32)
+    assert propose_ngram(ctx, 2).size == 0
+    assert propose_ngram(ctx, 2, min_ngram=1).tolist() == [1, 9]
+
+
+def test_spec_params_validation():
+    with pytest.raises(ValueError, match="unknown spec mode"):
+        SpecParams(mode="lookahead")
+    with pytest.raises(ValueError, match="k must be"):
+        SpecParams(k=-1)
+    with pytest.raises(ValueError, match="min_ngram"):
+        SpecParams(min_ngram=0)
+    with pytest.raises(ValueError, match="min_ngram"):
+        SpecParams(min_ngram=5, max_ngram=4)
+    assert SPEC_OFF.mode == "off" and SPEC_OFF.k == 0
+
+
+# -- acceptance statistics ----------------------------------------------------
+
+def _freqs(tokens, vocab):
+    return np.bincount(np.asarray(tokens).ravel(), minlength=vocab) \
+        / np.asarray(tokens).size
+
+
+def test_verify_samples_match_target_softmax():
+    """The committed-token distribution is the target distribution: grid
+    samples over many seeds reproduce softmax(logits) within sampling
+    noise.  This is the 'distribution provably unchanged' half of the
+    Leviathan specialization — every committed token IS a target sample."""
+    vocab, n = 12, 8192
+    rng = np.random.default_rng(0)
+    row = jnp.asarray(rng.normal(0, 1.5, (vocab,)), jnp.float32)
+    logits = jnp.broadcast_to(row, (n, 1, vocab))
+    toks = sample_token_grid(
+        logits, jnp.arange(n, dtype=jnp.uint32),
+        jnp.zeros((n,), jnp.int32), jnp.ones((n,), jnp.float32),
+        jnp.zeros((n,), jnp.int32), jnp.ones((n,), jnp.float32),
+        vocab=vocab)
+    expect = np.asarray(jax.nn.softmax(row))
+    got = _freqs(toks, vocab)
+    # 4-sigma per-bin tolerance for n draws
+    tol = 4 * np.sqrt(expect * (1 - expect) / n) + 1e-3
+    assert (np.abs(got - expect) < tol).all(), (got, expect)
+
+
+def test_point_mass_draft_accepted_with_target_probability():
+    """Exact-match acceptance of a deterministic draft fires with
+    probability ``p_target(d)`` — the Leviathan acceptance probability
+    for a point-mass proposal distribution."""
+    vocab, n = 12, 8192
+    rng = np.random.default_rng(1)
+    row = jnp.asarray(rng.normal(0, 1.2, (vocab,)), jnp.float32)
+    logits = jnp.broadcast_to(row, (n, 1, vocab))
+    toks = np.asarray(sample_token_grid(
+        logits, jnp.arange(n, dtype=jnp.uint32),
+        jnp.zeros((n,), jnp.int32), jnp.ones((n,), jnp.float32),
+        jnp.zeros((n,), jnp.int32), jnp.ones((n,), jnp.float32),
+        vocab=vocab)).ravel()
+    probs = np.asarray(jax.nn.softmax(row))
+    for draft in (int(np.argmax(probs)), int(np.argmin(probs)), 0):
+        p = probs[draft]
+        accept_rate = (toks == draft).mean()
+        tol = 4 * np.sqrt(p * (1 - p) / n) + 1e-3
+        assert abs(accept_rate - p) < tol, (draft, accept_rate, p)
+
+
+def test_grid_keys_equal_sequential_keys():
+    """Position ``i`` of the verify grid draws with key
+    ``(seed, emitted + i)`` — bitwise the key a plain decode would use
+    after emitting ``i`` more tokens.  This coupling is what makes
+    speculative sampled streams identical to non-speculative ones."""
+    vocab, B, K1 = 32, 3, 4
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.normal(0, 1, (B, K1, vocab)), jnp.float32)
+    seeds = jnp.asarray([11, 22, 33], jnp.uint32)
+    steps = jnp.asarray([0, 5, 9], jnp.int32)
+    temp = jnp.full((B,), 0.9, jnp.float32)
+    top_k = jnp.asarray([0, 8, 0], jnp.int32)
+    top_p = jnp.asarray([1.0, 1.0, 0.9], jnp.float32)
+    grid = sample_token_grid(logits, seeds, steps, temp, top_k, top_p,
+                             vocab=vocab)
+    for i in range(K1):
+        seq = sample_tokens(logits[:, i], seeds, steps + i, temp, top_k,
+                            top_p, vocab=vocab)
+        assert (grid[:, i] == seq).all()
+
+
+# -- rollback == never-wrote-it ----------------------------------------------
+
+@pytest.mark.parametrize("kv", ["dense", "paged"])
+def test_rollback_equals_fresh_cache_bitwise(tiny, kv):
+    """Write junk positions through ``verify_step``, roll them back, then
+    decode one token: the logits must be bit-identical to a cache that
+    never saw the junk.  Run for both cache layouts — dense rewinds ring
+    positions, paged truncates lengths."""
+    model, params = tiny
+    B, L = 2, 10
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, CFG.vocab, (B, L)).astype(np.int32)
+
+    def fresh_caches():
+        if kv == "paged":
+            M = MAX_LEN // 8
+            c = model.init_paged_caches(B, pool_blocks=B * M + 2,
+                                        block_size=8, max_blocks=M)
+            # disjoint physical blocks per row, same table on every layer
+            bt = np.stack([np.arange(b * M, (b + 1) * M) for b in range(B)])
+            c = c._replace(kv=c.kv._replace(block_tables=jnp.broadcast_to(
+                jnp.asarray(bt, jnp.int32), c.kv.block_tables.shape)))
+            return c
+        return model.init_caches(B, MAX_LEN)
+
+    def prefill(c):
+        _, c = model.prefill_chunk(params, c, jnp.asarray(prompt),
+                                   jnp.zeros((B,), jnp.int32),
+                                   jnp.full((B,), L, jnp.int32))
+        return c
+
+    clean = prefill(fresh_caches())
+    dirty = prefill(fresh_caches())
+    # verify writes 3 junk positions on every row
+    junk = jnp.asarray(rng.integers(0, CFG.vocab, (B, 3)), jnp.int32)
+    _, dirty = model.verify_step(params, dirty, junk,
+                                 jnp.full((B,), 3, jnp.int32))
+    dirty = model.rollback_cache_rows(
+        dirty, jnp.full((B,), L, jnp.int32), jnp.ones((B,), bool))
+
+    tok = jnp.asarray(rng.integers(0, CFG.vocab, (B, 1)), jnp.int32)
+    live = jnp.ones((B,), bool)
+    lc, _ = model.serve_step(params, clean, tok, live=live)
+    ld, _ = model.serve_step(params, dirty, tok, live=live)
+    assert (np.asarray(lc) == np.asarray(ld)).all(), \
+        f"{kv}: rollback left the cache behaviorally different"
+
+
+def test_partial_rollback_keeps_accepted_writes(tiny):
+    """Rolling back only the rejected tail: positions kept by the verify
+    must stay bitwise equal to feeding those tokens one-at-a-time through
+    plain decode steps."""
+    model, params = tiny
+    B, L = 2, 8
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, CFG.vocab, (B, L)).astype(np.int32)
+    toks = rng.integers(0, CFG.vocab, (B, 4)).astype(np.int32)
+
+    def prefill():
+        c = model.init_caches(B, MAX_LEN)
+        _, c = model.prefill_chunk(params, c, jnp.asarray(prompt),
+                                   jnp.zeros((B,), jnp.int32),
+                                   jnp.full((B,), L, jnp.int32))
+        return c
+
+    # path A: verify all 4, roll back the last 2 (keep L + 2)
+    ca = prefill()
+    _, ca = model.verify_step(params, ca, jnp.asarray(toks),
+                              jnp.full((B,), 4, jnp.int32))
+    ca = model.rollback_cache_rows(ca, jnp.full((B,), L + 2, jnp.int32),
+                                   jnp.ones((B,), bool))
+    # path B: plain decode of the 2 accepted tokens
+    cb = prefill()
+    live = jnp.ones((B,), bool)
+    for i in range(2):
+        _, cb = model.serve_step(params, cb, jnp.asarray(toks[:, i:i + 1]),
+                                 live=live)
+    probe = jnp.asarray(rng.integers(0, CFG.vocab, (B, 1)), jnp.int32)
+    la, _ = model.serve_step(params, ca, probe, live=live)
+    lb, _ = model.serve_step(params, cb, probe, live=live)
+    assert (np.asarray(la) == np.asarray(lb)).all()
+
+
+# -- the k=0 / no-proposal path -----------------------------------------------
+
+def _serve(model, params, reqs, **kw):
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked",
+                        replan_every=10_000, **kw)
+    rs = [Request(rid=r.rid, prompt=np.asarray(r.prompt).copy(),
+                  max_new_tokens=r.max_new_tokens, sampling=r.sampling)
+          for r in reqs]
+    for r in rs:
+        eng.submit(r)
+    eng.run()
+    return [list(r.generated) for r in rs], eng
+
+
+def test_spec_k0_runs_plain_decode_path(tiny):
+    """``k=0`` (or a lookup that never fires) must take the existing
+    decode dispatch: zero verify calls, streams equal to spec=off."""
+    model, params = tiny
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(0, CFG.vocab, 10 + i)
+                    .astype(np.int32), max_new_tokens=6,
+                    sampling=SamplingParams(temperature=0.7, seed=i)
+                    if i % 2 else None)
+            for i in range(3)]
+    base, _ = _serve(model, params, reqs)
+    spec, eng = _serve(model, params, reqs,
+                       spec=SpecParams(mode="ngram", k=0))
+    assert spec == base
+    assert eng.spec_stats.verify_calls == 0
+    assert eng.spec_stats == SpecStats()
+
+
+def test_spec_rejects_unsupported_models(tiny):
+    model, params = tiny
+    bad = dataclasses.replace(CFG, name="spec-swa", sliding_window=8)
+    with pytest.raises(ValueError, match="full-attention"):
+        ServingEngine(Model(bad), None, slots=1, max_len=16, chunk=4,
+                      spec=SpecParams(mode="ngram"))
+    with pytest.raises(ValueError, match="draft_model"):
+        ServingEngine(model, params, slots=1, max_len=16, chunk=4,
+                      spec=SpecParams(mode="draft"))
+
+
+def test_spec_dense_rejects_ring_wrapping_requests(tiny):
+    """A speculative request whose prompt+budget exceeds the dense ring
+    must be rejected at submit — rollback rewinds by absolute position."""
+    model, params = tiny
+    eng = ServingEngine(model, params, slots=1, max_len=16, chunk=4,
+                        spec=SpecParams(mode="ngram", k=4))
+    with pytest.raises(ValueError, match="horizon"):
+        eng.submit(Request(rid=0, prompt=np.arange(12, dtype=np.int32),
+                           max_new_tokens=8))
+    # the same request with speculation off still wraps like it always did
+    eng2 = ServingEngine(model, params, slots=1, max_len=16, chunk=4)
+    eng2.submit(Request(rid=0, prompt=np.arange(12, dtype=np.int32),
+                        max_new_tokens=8))
+
+
+# -- draft-model proposer -----------------------------------------------------
+
+def test_draft_proposer_oracle_matches_target_greedy(tiny):
+    """The target model serving as its own draft proposes exactly the
+    tokens the target will greedily pick — so a greedy engine accepts
+    every draft and the proposer's cache sync survives multiple rounds."""
+    model, params = tiny
+    rng = np.random.default_rng(6)
+    reqs = [Request(rid=i, prompt=rng.integers(0, CFG.vocab, 9 + 3 * i)
+                    .astype(np.int32), max_new_tokens=8)
+            for i in range(2)]
+    base, _ = _serve(model, params, reqs)
+    spec, eng = _serve(model, params, reqs,
+                       spec=SpecParams(mode="draft", k=4),
+                       draft_model=model, draft_params=params)
+    assert spec == base
+    s = eng.spec_stats
+    assert s.drafts_proposed > 0
+    assert s.drafts_accepted == s.drafts_proposed  # oracle: all accepted
+    # fused verify emitted multiple tokens per dispatch
+    assert s.spec_tokens > s.verify_calls
+
+
+def test_draft_proposer_resyncs_after_slot_reuse(tiny):
+    """Slot ownership changes (request retires, another takes the slot)
+    force a cache reset + re-feed in the proposer; outputs must still be
+    the oracle's (all-accepted) streams."""
+    model, params = tiny
+    proposer = DraftModelProposer(model, params, slots=1, max_len=MAX_LEN,
+                                  feed_chunk=4)
+    rng = np.random.default_rng(7)
+    ctx_a = rng.integers(0, CFG.vocab, 11).astype(np.int64)
+    ctx_b = rng.integers(0, CFG.vocab, 7).astype(np.int64)
+    d1 = proposer.propose([(0, 1, ctx_a, 3)])[0]
+    # same request, context grown by the committed tokens + pending
+    grown = np.concatenate([ctx_a, d1.astype(np.int64)[:2]])
+    d2 = proposer.propose([(0, 1, grown, 3)])[0]
+    # new request takes the slot: reset path
+    d3 = proposer.propose([(0, 2, ctx_b, 3)])[0]
+    # a fresh proposer given the same contexts must agree exactly
+    fresh = DraftModelProposer(model, params, slots=1, max_len=MAX_LEN)
+    assert fresh.propose([(0, 1, ctx_a, 3)])[0].tolist() == d1.tolist()
+    assert fresh.propose([(0, 1, grown, 3)])[0].tolist() == d2.tolist()
+    assert fresh.propose([(0, 2, ctx_b, 3)])[0].tolist() == d3.tolist()
+
+
+# -- serve_schedule spec-k planning -------------------------------------------
+
+def test_plan_spec_k_unknown_rate_starts_midrange():
+    assert _plan_spec_k(-1.0) == 4
+
+
+def test_plan_spec_k_monotone_in_acceptance():
+    ks = [_plan_spec_k(r) for r in (0.0, 0.3, 0.6, 0.9, 0.99, 0.999)]
+    assert ks == sorted(ks), ks
+    assert ks[0] == 0          # hopeless drafts: plan speculation off
+    assert ks[-1] == max(SERVE_SPEC_KS)  # near-perfect: longest draft
+    assert all(k in SERVE_SPEC_KS for k in ks)
+
+
+def test_engine_replan_adopts_spec_k(tiny):
+    """A speculative engine's replan feeds its acceptance rate to the
+    serve_schedule pass and adopts the planned draft length."""
+    model, params = tiny
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked",
+                        replan_every=4, spec=SpecParams(mode="ngram"))
+    rng = np.random.default_rng(8)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=rng.integers(0, CFG.vocab, 10)
+                           .astype(np.int32), max_new_tokens=8))
+    eng.run()
+    assert eng.scheduler.cfg.spec_k is not None
+    assert eng.scheduler.cfg.spec_k in SERVE_SPEC_KS
+    plan = eng.scheduler.last_plan
+    assert plan is not None and plan.get("spec") == "ngram"

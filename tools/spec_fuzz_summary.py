@@ -1,0 +1,60 @@
+"""Print a one-line speculative-decoding acceptance summary for CI.
+
+Replays a handful of the serving-fuzz traces with n-gram speculation (and
+one oracle draft-model trace) through the exact harness the fuzz tests
+use, then prints the aggregate acceptance counters.  The CI fuzz job runs
+this after the pytest leg so the workflow log carries a visible
+acceptance-rate line per run — drift in proposer or verify behaviour
+shows up as a moved number even when every equivalence assertion still
+passes.
+
+Usage: PYTHONPATH=src python tools/spec_fuzz_summary.py [n_traces]
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "tests"))
+
+import jax  # noqa: E402
+
+from test_serving_fuzz import (CFG, DRAFT_CFG, SPEC_TOTALS, SpecParams,  # noqa: E402
+                               make_trace, run_trace)
+from repro.models.model import Model  # noqa: E402
+
+
+def main(n_traces: int = 6) -> int:
+    model = Model(CFG)
+    params = model.init(jax.random.key(0))
+    draft = Model(DRAFT_CFG)
+    draft_params = draft.init(jax.random.key(7))
+
+    spec = SpecParams(mode="ngram", k=3, min_ngram=1)
+    for seed in range(n_traces):
+        trace = make_trace(seed, sampled=bool(seed % 2))
+        for kv in ("dense", "paged"):
+            base = run_trace(model, params, trace, kv)
+            got = run_trace(model, params, trace, kv, spec=spec)
+            assert got == base, f"spec divergence seed={seed} kv={kv}"
+    # one oracle trace so the acceptance counter has real signal even on
+    # random-weight traces (the target's own guesses always get accepted)
+    trace = make_trace(0, sampled=False)
+    base = run_trace(model, params, trace, "paged")
+    got = run_trace(model, params, trace, "paged",
+                    spec=SpecParams(mode="draft", k=3),
+                    draft=(model, params))
+    assert got == base, "oracle draft divergence"
+
+    t = SPEC_TOTALS
+    rate = t["accepted"] / t["proposed"] if t["proposed"] else 0.0
+    print(f"spec-fuzz summary: traces={n_traces}+oracle "
+          f"proposed={t['proposed']} accepted={t['accepted']} "
+          f"accept_rate={rate:.3f} verify_calls={t['verify_calls']} "
+          f"spec_tokens={t['spec_tokens']}")
+    if t["proposed"] == 0:
+        print("spec-fuzz summary: FAIL — no drafts proposed", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(int(sys.argv[1]) if len(sys.argv) > 1 else 6))
