@@ -21,11 +21,13 @@ from .common import emit, timeit
 
 
 def run() -> None:
-    # On TPU the linked regions lower to the Pallas kernels (the VMEM-resident
-    # fused cbra path in core/engine.py eval_op) — that is where xenos must
-    # beat whole-graph XLA of the unoptimized graph on bert_s/shufflenet.  On
-    # CPU the kernels run in interpret mode and would only add overhead.
-    use_pallas = jax.default_backend() == "tpu"
+    # The kernel_select pass routes the linked regions: on TPU they lower to
+    # the Pallas kernels (the VMEM-resident fused cbra path in core/engine.py
+    # eval_op) — that is where xenos must beat whole-graph XLA of the
+    # unoptimized graph on bert_s/shufflenet.  On CPU the kernels would run
+    # in interpret mode and only add overhead, so the plan keeps XLA.
+    plan, _ = pipeline.select_kernel_plan(
+        {"accelerator": jax.default_backend()})
     for name in sorted(cnn_zoo.ZOO):
         g = cnn_zoo.build(name)
         # wall-clock uses the VO (linking) rewrite; HO's split targets the
@@ -47,14 +49,13 @@ def run() -> None:
             return tuple(env[t] for t in g.outputs)
 
         t_xla = timeit(jax.jit(xla_fn), params, *inputs)
-        t_xenos = timeit(Engine(opt, "xenos", use_pallas=use_pallas),
-                         params, *inputs)
+        t_xenos = timeit(Engine(opt, "xenos", plan=plan), params, *inputs)
         emit(f"fig8.{name}.oplib_baseline", t_oplib, "")
         emit(f"fig8.{name}.xla_unoptimized", t_xla, "")
         emit(f"fig8.{name}.xenos", t_xenos,
              f"speedup_vs_oplib={t_oplib/t_xenos:.2f}x;"
              f"speedup_vs_xla={t_xla/t_xenos:.2f}x;"
-             f"pallas={use_pallas}")
+             f"linked_matmul={plan.linked_matmul}")
 
 
 if __name__ == "__main__":

@@ -12,8 +12,14 @@ config and the per-request generation policy change:
   * ``chunked`` — batched admission + chunked prefill interleaved with
     decode (the default serving configuration);
   * ``sampled`` — chunked, but every request samples with its own
-    temperature/top-p/seed (the non-greedy path: one extra batched
-    sampling dispatch per tick);
+    temperature/top-p/seed.  The auto kernel plan routes this through
+    the fused sampler, whose ``serve_sample`` jit folds decode step and
+    sampling into ONE dispatch per tick — the sampled column should sit
+    within a few percent of ``chunked``;
+  * ``sampled_ref`` — same workload with ``kernel_plan="off"``: the
+    seed path's reference two-sort sampler as a second dispatch per
+    tick.  The gap between ``sampled_ref`` and ``sampled`` is the fused
+    sampler's win;
   * ``mixed``   — chunked, but a quarter of the requests arrive
     high-priority *after* the batch has settled into decode, so the
     scheduler's priority admission + preemption + restore machinery is
@@ -88,24 +94,26 @@ CHUNK = 8
 KV_BLOCK = 8
 
 #: policy name -> (prefill_mode, per-request sampling?, priority mix?,
-#:                 kv layout, shared-prefix workload?)
-POLICIES: dict[str, tuple[str, bool, bool, str, bool]] = {
-    "serial": ("serial", False, False, "dense", False),
-    "batched": ("batched", False, False, "dense", False),
-    "chunked": ("chunked", False, False, "dense", False),
-    "sampled": ("chunked", True, False, "dense", False),
-    "mixed": ("chunked", False, True, "dense", False),
-    "paged": ("chunked", False, False, "paged", False),
-    "chunked_shared": ("chunked", False, False, "dense", True),
-    "paged_shared": ("chunked", False, False, "paged", True),
+#:                 kv layout, shared-prefix workload?, kernel plan mode)
+POLICIES: dict[str, tuple[str, bool, bool, str, bool, str]] = {
+    "serial": ("serial", False, False, "dense", False, "auto"),
+    "batched": ("batched", False, False, "dense", False, "auto"),
+    "chunked": ("chunked", False, False, "dense", False, "auto"),
+    "sampled": ("chunked", True, False, "dense", False, "auto"),
+    "sampled_ref": ("chunked", True, False, "dense", False, "off"),
+    "mixed": ("chunked", False, True, "dense", False, "auto"),
+    "paged": ("chunked", False, False, "paged", False, "auto"),
+    "chunked_shared": ("chunked", False, False, "dense", True, "auto"),
+    "paged_shared": ("chunked", False, False, "paged", True, "auto"),
 }
 
 
 def _serve(model, params, policy: str, cfg) -> tuple[float, dict]:
-    mode, sampled, mixed, kv, shared = POLICIES[policy]
+    mode, sampled, mixed, kv, shared, planmode = POLICIES[policy]
     engine = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
                            prefill_mode=mode, chunk=CHUNK, kv=kv,
-                           kv_block_size=KV_BLOCK if kv == "paged" else None)
+                           kv_block_size=KV_BLOCK if kv == "paged" else None,
+                           kernel_plan="off" if planmode == "off" else None)
     rng = np.random.default_rng(0)
     prefix = rng.integers(0, cfg.vocab, SHARED_PREFIX).astype(np.int32) \
         if shared else None
@@ -278,16 +286,20 @@ def run() -> None:
         dt, stats = _serve(model, params, policy, cfg)
         times[policy] = dt
         saved[policy] = stats.get("prefill_tokens_saved", 0)
+        kplan = ",".join(f"{k}:{v}"
+                         for k, v in sorted(stats["kernel_plan"].items()))
         emit(f"serving.{ARCH}.{policy}", dt / total_tokens,
              f"tokens_per_s={total_tokens / dt:.1f};"
              f"decode_tokens_per_s={stats.get('decode_tokens_per_s', 0):.1f};"
              f"chunk={stats['plan']['chunk']};"
              f"preempted={stats['scheduler']['preempted']};"
-             f"prefill_tokens_saved={saved[policy]}")
+             f"prefill_tokens_saved={saved[policy]};"
+             f"kernel_plan={kplan}")
     emit(f"serving.{ARCH}.takeaways", 0.0,
          f"batched_speedup_vs_serial={times['serial'] / times['batched']:.2f}x;"
          f"chunked_speedup_vs_serial={times['serial'] / times['chunked']:.2f}x;"
          f"sampling_overhead_vs_chunked={times['sampled'] / times['chunked']:.2f}x;"
+         f"sampling_overhead_reference={times['sampled_ref'] / times['chunked']:.2f}x;"
          f"priority_overhead_vs_chunked={times['mixed'] / times['chunked']:.2f}x;"
          f"paged_overhead_vs_chunked={times['paged'] / times['chunked']:.2f}x;"
          f"paged_shared_prefill_tokens_saved={saved['paged_shared']};"

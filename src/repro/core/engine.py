@@ -18,8 +18,10 @@ Three execution modes mirror the paper's Fig.-7 ablation:
   matched (no transposes).
 
 The engine is also where linked ops (``cbra``/``cbrm``) may lower to the
-Pallas kernels in ``repro.kernels`` (``use_pallas=True``), demonstrating the
-kernel-level version of operator linking.
+Pallas kernels in ``repro.kernels`` — the ``linked_matmul`` site of a
+``KernelPlan`` (``core.pipeline``), demonstrating the kernel-level version
+of operator linking.  Pass ``plan=`` (or let ``kernel_select`` decide) to
+route it.
 
 Graphs should be optimized through the pass manager (core/pipeline.py)
 rather than by calling stages directly; ``build_engine`` below does both
@@ -126,8 +128,11 @@ def _matmul_split(x, w, b, plan: SplitPlan | None):
 
 
 def eval_op(node: OpNode, inputs: list[jax.Array],
-            params: dict[str, jax.Array], use_pallas: bool = False) -> list[jax.Array]:
-    """Evaluate one op in NHWC semantics."""
+            params: dict[str, jax.Array],
+            linked_backend: str = "xla") -> list[jax.Array]:
+    """Evaluate one op in NHWC semantics.  ``linked_backend`` is the
+    ``linked_matmul`` site of a ``KernelPlan``: ``"pallas"`` lowers
+    eligible linked ``cbra`` ops to the fused kernel."""
     t = node.op_type
     a = node.attrs
     plan: SplitPlan | None = node.dataflow.get("split_plan")
@@ -145,7 +150,7 @@ def eval_op(node: OpNode, inputs: list[jax.Array],
         return [jax.nn.relu(y + b)]
     if t in ("cbra", "cbrm"):
         pool_attrs = a.get("pool", {})
-        if use_pallas and t == "cbra" and a.get("ksize", 1) == 1 \
+        if linked_backend == "pallas" and t == "cbra" and a.get("ksize", 1) == 1 \
                 and pool_attrs.get("ksize", 2) == 2:
             from repro.kernels.linked_cbr_pool import ops as cbra_ops
             w, b = fold_cbr(node, params)
@@ -204,11 +209,14 @@ def _from_storage(x: jax.Array) -> jax.Array:
 class Engine:
     """Executes a graph in one of the three ablation modes."""
 
-    def __init__(self, g: Graph, mode: str = "xenos", use_pallas: bool = False):
+    def __init__(self, g: Graph, mode: str = "xenos", plan=None):
+        from .pipeline import KernelPlan
         assert mode in ("vanilla", "ho", "xenos"), mode
         self.graph = g
         self.mode = mode
-        self.use_pallas = use_pallas
+        #: KernelPlan routing the linked-op lowering; defaults to the
+        #: pure-XLA seed plan (``KernelPlan()``).
+        self.plan = plan if plan is not None else KernelPlan()
         self._op_jits: dict[str, Callable] = {}
         self._group_jit: Callable | None = None
 
@@ -220,7 +228,7 @@ class Engine:
             env: dict[str, jax.Array] = dict(zip(g.inputs, inputs))
             for node in g.nodes:
                 ins = [env[t] for t in node.inputs]
-                outs = eval_op(node, ins, params, self.use_pallas)
+                outs = eval_op(node, ins, params, self.plan.linked_matmul)
                 env.update(zip(node.outputs, outs))
             return tuple(env[t] for t in g.outputs)
 
@@ -242,7 +250,7 @@ class Engine:
         if node.name not in self._op_jits:
             def fn(params, *ins, _node=node):
                 ins = [_from_storage(x) for x in ins]          # mismatched read
-                outs = eval_op(_node, list(ins), params, False)
+                outs = eval_op(_node, list(ins), params, "xla")
                 return tuple(_to_storage(o) for o in outs)     # mismatched write
             self._op_jits[node.name] = jax.jit(fn)
         return self._op_jits[node.name]
@@ -264,23 +272,25 @@ class Engine:
 
 
 def execute(g: Graph, params: dict[str, jax.Array], inputs: dict[str, Any],
-            mode: str = "xenos", use_pallas: bool = False):
+            mode: str = "xenos", plan=None):
     """One-shot functional execution (used by tests)."""
-    eng = Engine(g, mode, use_pallas)
+    eng = Engine(g, mode, plan)
     ins = [jnp.asarray(inputs[name]) for name in g.inputs]
     return eng(params, *ins)
 
 
 def build_engine(g: Graph, mode: str = "xenos",
-                 device=None, use_pallas: bool = False):
+                 device=None, plan=None):
     """Optimize ``g`` for ``mode`` through the pass pipeline, then wrap it.
 
     This is the one-stop path callers should use instead of hand-wiring
     ``fuse_cbr -> link -> dos`` themselves: ``vanilla`` runs no passes,
     ``ho`` runs ``dos_split`` only, ``xenos`` the full default pipeline.
     Returns ``(Engine, PassReport)`` — the report carries per-pass wall
-    times, node/edge deltas and the modeled cost saving.
+    times, node/edge deltas and the modeled cost saving.  ``plan``
+    (``KernelPlan`` or None for the seed plan) routes the linked-op
+    lowering — run the ``kernel_select`` pass to derive one.
     """
     from .pipeline import optimize_for_mode
     opt, report = optimize_for_mode(g, mode, device)
-    return Engine(opt, mode, use_pallas), report
+    return Engine(opt, mode, plan), report

@@ -24,6 +24,8 @@ Registered passes (see the bottom of this file):
   ``link_operators``  vertical optimization: Table-1 linking (§4.1)
   ``dos_split``       horizontal optimization: DSP-aware operator split (§4.2)
   ``dxenos_plan``     d-Xenos partition-scheme planning, Algorithm 1 (§5)
+  ``serve_schedule``  serving-schedule planning (slots/chunk/KV pool/spec_k)
+  ``kernel_select``   kernel routing: cost model + timings -> ``KernelPlan``
   ==============  ============================================================
 
 Levels are cumulative pass prefixes (``dxenos_plan`` is opt-in because it
@@ -622,11 +624,17 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
       with stats, requests are modeled at twice their prompt length of
       context, floored so one maximal request always fits.
     """
+    fallback = False
     divisors = [b for b in SERVE_KV_BLOCK_SIZES if max_len % b == 0]
     if not divisors:
         # no preferred size tiles this horizon: fall back to the largest
         # power-of-two divisor (>=1 always exists), so planned defaults
-        # never hand the engine a block size it must reject
+        # never hand the engine a block size it must reject — but the
+        # caller must see it happened (a 1/2/4-token block pool fragments
+        # badly and shares almost no prefixes), so the fallback is
+        # surfaced in the plan and the PassReport instead of silently
+        # shipping a degraded geometry
+        fallback = True
         divisors = [next(b for b in (4, 2, 1) if max_len % b == 0)]
     target = avg_prompt / 2 if avg_prompt > 0 else float(chunk)
     fitting = [b for b in divisors if b <= max(target, divisors[0])]
@@ -637,13 +645,16 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
         pool_blocks = max(per_seq, slots * modeled)
     else:
         pool_blocks = slots * per_seq
-    return {
+    out = {
         "kv_block_size": bs,
         "kv_pool_blocks": pool_blocks,
         # fraction of the dense caches' KV slots the pool does not allocate
         "kv_saving": round(max(0.0, 1.0 - pool_blocks * bs
                                 / (slots * max_len)), 4),
     }
+    if fallback:
+        out["kv_block_fallback"] = True
+    return out
 
 
 #: speculative draft lengths the planner may choose between (0 = off); a
@@ -789,6 +800,13 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     if kv == "paged":
         plan["kv"] = kv
         plan.update(_plan_kv_pool(slots, max_len, chunk, avg_prompt))
+    # the serving engine resolves a KernelPlan once (kernel_select pass)
+    # and hands it back through every replan: echoing it into the serve
+    # plan keeps the per-site backend choice visible in stats()/reports
+    # without making replans cache-miss on it
+    kplan = o.get("kernel_plan")
+    if kplan:
+        plan["kernel_plan"] = dict(kplan)
     spec = str(o.get("spec", "off"))
     if spec != "off":
         # speculative engines: plan the draft length from the observed
@@ -812,6 +830,188 @@ register_pass(Pass(
     description="Serving-schedule planning: stage stats -> slot/chunk/"
                 "admit/preempt/prefill-mode plan for the continuous-"
                 "batching scheduler",
+))
+
+
+# ---------------------------------------------------------------------------
+# Kernel routing (kernel_select)
+# ---------------------------------------------------------------------------
+
+#: per-site backend vocabulary the router chooses from.  A backend must be
+#: listed here before ``kernel_select`` may pick it and before a
+#: :class:`KernelPlan` will accept it (docs/kernels.md walks through adding
+#: one).  Sites are the serving hot-path dispatch points:
+#:
+#:   * ``decode_dense``  — dense ring-buffer decode attention
+#:                         (``xla`` einsum+softmax | ``pallas`` flash-decode);
+#:   * ``decode_paged``  — block-paged decode attention (``gather`` the block
+#:                         table into a dense view | ``fold`` replace the K
+#:                         gather with an exact one-hot contraction, bit-
+#:                         identical | ``pallas`` scalar-prefetched kernel);
+#:   * ``prefill_chunk`` — chunked prefill attention (``xla`` only today);
+#:   * ``linked_matmul`` — the linked cbra op in the CNN engine
+#:                         (``xla`` fused | ``pallas`` linked_cbr_pool);
+#:   * ``sampler``       — per-request token sampling (``reference`` two-sort
+#:                         | ``fused`` one-sort, fused into the decode-step
+#:                         dispatch | ``pallas`` sort-free threshold kernel).
+KERNEL_SITE_BACKENDS: dict[str, tuple[str, ...]] = {
+    "decode_dense": ("xla", "pallas"),
+    "decode_paged": ("gather", "fold", "pallas"),
+    "prefill_chunk": ("xla",),
+    "linked_matmul": ("xla", "pallas"),
+    "sampler": ("reference", "fused", "pallas"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Per-site kernel backend choice, produced by ``kernel_select``.
+
+    The defaults are the seed path (pure-XLA attention, gathered paged
+    view, two-sort reference sampler) so ``KernelPlan()`` reproduces the
+    pre-routing engine bit for bit — the serving-fuzz baseline.  Frozen
+    and hashable: the serving engine keys its jit caches on
+    ``(max_len, plan)``, and ``repr`` round-trips through the optimize()
+    result cache's option fingerprint.
+    """
+
+    decode_dense: str = "xla"
+    decode_paged: str = "gather"
+    prefill_chunk: str = "xla"
+    linked_matmul: str = "xla"
+    sampler: str = "reference"
+
+    def __post_init__(self):
+        for site, backend in self.items():
+            allowed = KERNEL_SITE_BACKENDS[site]
+            if backend not in allowed:
+                raise PipelineError(
+                    f"unknown backend {backend!r} for kernel site "
+                    f"{site!r}; have {allowed}")
+
+    def items(self) -> list[tuple[str, str]]:
+        return [(f.name, getattr(self, f.name))
+                for f in dataclasses.fields(self)]
+
+    def as_dict(self) -> dict[str, str]:
+        return dict(self.items())
+
+
+def _modeled_decode_paged(o: dict[str, Any]) -> tuple[str, dict[str, Any]]:
+    """Roofline the two CPU paged-decode lowerings: gather vs fold.
+
+    ``gather`` reads K and V pool blocks through dynamic-index takes and
+    materializes a dense per-request view; ``fold`` computes the K view
+    as an exact one-hot contraction over the physical-block axis — a
+    dense matmul XLA fuses into the decode step, eliminating the K-side
+    take (V is still gathered).  Fold trades select FLOPs proportional
+    to pool occupancy for dropping the K gather's scalarized indexing,
+    which the model charges as a latency term on top of the copy
+    traffic; the winner depends on pool geometry, and measured timings
+    (``tools/kernel_tune.py``) override this model when present.
+    """
+    B = int(o.get("slots", 4))
+    H = int(o.get("q_heads", 8))
+    K = int(o.get("kv_heads", max(1, H // 4)))
+    D = int(o.get("head_dim", 64))
+    W = int(o.get("max_len", 256))
+    bs = int(o.get("kv_block_size", 0))
+    P = int(o.get("kv_pool_blocks", 0))
+    if bs <= 0 or P <= 0:
+        return "gather", {}
+    itemsize = 4
+    kv_bytes = K * D * itemsize
+    att_flops = 4 * B * H * D * W              # scores + PV, logical view
+    # per-block dynamic-index dispatch overhead for one take (seconds):
+    # the CPU cost the fold lowering exists to remove.
+    take_s = float(o.get("gather_take_s", 2e-7))
+    n_blocks = B * (W // bs)
+    gather_bytes = 2 * (2 * B * W * kv_bytes)  # K+V: pool read + view write
+    fold_flops = (att_flops
+                  + 2 * B * W * P * K * D)     # one-hot K select matmul
+    fold_bytes = (P * bs * kv_bytes            # K pool, read in place
+                  + 2 * B * W * kv_bytes)      # V: pool read + view write
+    gather_s = (cm.roofline(att_flops, gather_bytes, 0).serial_s
+                + 2 * n_blocks * take_s)       # K and V takes
+    fold_s = (cm.roofline(fold_flops, fold_bytes, 0).serial_s
+              + n_blocks * take_s)             # V take only
+    choice = "fold" if fold_s < gather_s else "gather"
+    return choice, {"decode_paged_modeled_s": {
+        "gather": round(gather_s, 12), "fold": round(fold_s, 12)}}
+
+
+def select_kernel_plan(options: dict[str, Any] | None = None,
+                       ) -> tuple[KernelPlan, dict[str, Any]]:
+    """Decide the per-site backends.  Returns ``(plan, decision detail)``.
+
+    ``options``:
+
+      * ``accelerator`` — ``jax.default_backend()`` of the executing
+        device (default ``"cpu"``); TPUs route attention and the sampler
+        to the Pallas kernels, hosts keep XLA attention and take the
+        one-sort ``fused`` sampler;
+      * ``slots`` / ``q_heads`` / ``kv_heads`` / ``head_dim`` /
+        ``max_len`` / ``kv_block_size`` / ``kv_pool_blocks`` — geometry
+        for the gather-vs-fold roofline (:func:`_modeled_decode_paged`);
+      * ``timings`` — ``{"site:backend": seconds}`` measured by the
+        micro-benchmark sweep (``launch/autotune.py`` /
+        ``tools/kernel_tune.py``); a site with measured candidates takes
+        the argmin and skips the heuristics entirely.
+    """
+    o = dict(options or {})
+    acc = str(o.get("accelerator", "cpu"))
+    timings = dict(o.get("timings") or {})
+    tpu = acc == "tpu"
+    detail: dict[str, Any] = {"accelerator": acc}
+
+    def measured(site: str) -> str | None:
+        seen = {b: float(timings[f"{site}:{b}"])
+                for b in KERNEL_SITE_BACKENDS[site]
+                if f"{site}:{b}" in timings}
+        if not seen:
+            return None
+        detail[f"{site}_measured_s"] = {b: round(v, 9)
+                                        for b, v in sorted(seen.items())}
+        return min(seen, key=seen.get)
+
+    paged_default, paged_detail = _modeled_decode_paged(o)
+    detail.update(paged_detail)
+    plan = KernelPlan(
+        decode_dense=measured("decode_dense")
+        or ("pallas" if tpu else "xla"),
+        decode_paged=measured("decode_paged")
+        or ("pallas" if tpu else paged_default),
+        prefill_chunk=measured("prefill_chunk") or "xla",
+        linked_matmul=measured("linked_matmul")
+        or ("pallas" if tpu else "xla"),
+        sampler=measured("sampler") or ("pallas" if tpu else "fused"),
+    )
+    return plan, detail
+
+
+def _kernel_select_fn(g: Graph, ctx: PassContext) -> Graph:
+    """Kernel-routing lowering: annotate the per-site :class:`KernelPlan`.
+
+    The plan lands on every node (``dataflow["kernel_plan"]``) and in the
+    report via ``ctx.artifacts`` — the same measure/model/choose pattern
+    as ``dxenos_plan`` and ``serve_schedule``, applied to backend
+    dispatch instead of partitioning or scheduling.  Options are
+    documented on :func:`select_kernel_plan`.
+    """
+    plan, detail = select_kernel_plan(ctx.options)
+    out = g.clone()
+    for node in out.nodes:
+        node.dataflow["kernel_plan"] = plan.as_dict()
+    ctx.artifacts.update({**plan.as_dict(), **detail})
+    return out
+
+
+register_pass(Pass(
+    name="kernel_select",
+    fn=_kernel_select_fn,
+    description="Kernel routing: roofline cost model + measured timings "
+                "-> per-site KernelPlan (decode attention, prefill, "
+                "linked matmul, sampler)",
 ))
 
 

@@ -13,6 +13,9 @@ Kernels:
   * split_matmul     — HO flagship: DOS §4.2.2 parameter split; every
     weight block is sized to VMEM (K/N/inC-chunked with accumulation).
   * decode_attention — GQA flash-decode for the serve_step hot loop.
+  * fused_sampler    — sort-free top-k/top-p support filter for the
+    serving sampler (binary-searched value thresholds; token-identical
+    to the two-sort reference, which backend a ``KernelPlan`` picks).
 """
 
 INTERPRET_DEFAULT = None  # resolved lazily: True on CPU, False on TPU

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the fused sampler (mirrors serving.sampling).
+
+The reference semantics are the two-sort temperature / top-k / top-p
+filter from ``serving/sampling._sample_one``: scale by temperature, keep
+the ``k`` highest scaled logits (ties at the k-th value all survive),
+then keep the smallest descending prefix of the remaining distribution
+with mass ``>= p`` (the most likely token always survives).  The draw is
+``jax.random.categorical`` under the request's ``fold_in(key(seed),
+step)`` key, with ``temperature <= 0`` short-circuiting to exact argmax.
+
+The filter and the draw are split (``masked_logits_ref`` /
+``sample_ref``) so backend tests can compare support masks and tokens
+independently.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def masked_logits_ref(row, temperature, top_k, top_p):
+    """Two-sort filter for one ``(vocab,)`` row -> masked scaled logits."""
+    vocab = row.shape[-1]
+    safe_t = jnp.where(temperature > 0, temperature, 1.0)
+    x = row / safe_t
+    kth = jnp.sort(x)[::-1][jnp.clip(top_k - 1, 0, vocab - 1)]
+    x = jnp.where((top_k <= 0) | (x >= kth), x, -jnp.inf)
+    probs = jax.nn.softmax(x)
+    sp = jnp.sort(probs)[::-1]
+    keep = (jnp.cumsum(sp) - sp) < jnp.maximum(top_p, 1e-6)
+    thresh = jnp.min(jnp.where(keep, sp, jnp.inf))
+    return jnp.where(probs >= thresh, x, -jnp.inf)
+
+
+def draw_ref(row, masked, seed, step, temperature):
+    """The keyed categorical draw over one masked row (argmax at T=0)."""
+    key = jax.random.fold_in(jax.random.key(seed), step)
+    sampled = jax.random.categorical(key, masked)
+    return jnp.where(temperature <= 0, jnp.argmax(row),
+                     sampled).astype(jnp.int32)
+
+
+def sample_ref(logits, seeds, steps, temperature, top_k, top_p, *,
+               vocab: int):
+    """Batched reference sampler: ``(B, V) -> (B,)`` int32 tokens.
+
+    Token-identical to ``serving.sampling.sample_tokens`` by
+    construction (same ops in the same order).
+    """
+    rows = logits[..., :vocab].astype(jnp.float32)
+    masked = jax.vmap(masked_logits_ref)(rows, temperature, top_k, top_p)
+    return jax.vmap(draw_ref)(rows, masked, seeds, steps, temperature)

@@ -10,11 +10,19 @@ hypothesis, the roofline delta is the measurement.
 
     PYTHONPATH=src python -m repro.launch.autotune --arch qwen3-1.7b \
         --shape decode_32k
+
+The same measure-and-argmin idea backs the ``kernel_select`` routing pass:
+:func:`bench_kernel_sites` micro-benchmarks each serving kernel site's
+candidate backends on the live device, and the resulting
+``{"site:backend": seconds}`` dict (persisted by ``tools/kernel_tune.py``,
+reloaded with :func:`load_timings`) overrides the pass's roofline
+heuristics site by site.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from repro.core.pipeline import PassRecord, PassReport
@@ -81,6 +89,121 @@ def tune(arch: str, shape: str, mesh_name: str = "single",
     print(report.format())
     print(f"best scheme: {best} ({objective}={best_t:.6f})")
     return best, results, report
+
+
+# ---------------------------------------------------------------------------
+# Kernel-site micro-benchmarks (the measured leg of kernel_select)
+# ---------------------------------------------------------------------------
+
+def _time_call(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_kernel_sites(slots: int = 4, max_len: int = 64, q_heads: int = 8,
+                       kv_heads: int = 2, head_dim: int = 64,
+                       kv_block_size: int = 8, vocab: int = 512,
+                       iters: int = 20, seed: int = 0,
+                       include_pallas: bool | None = None
+                       ) -> dict[str, float]:
+    """Time each serving kernel site's candidate backends on-device.
+
+    Returns the ``{"site:backend": seconds}`` dict ``select_kernel_plan``
+    consumes via its ``timings`` option — a measured argmin per site beats
+    the roofline heuristic whenever the two disagree.  ``include_pallas``
+    (default: only on TPU) adds the Pallas candidates; in interpret mode
+    they are orders of magnitude off their compiled cost, which would
+    poison the cache.  The sampler timing is the standalone dispatch; the
+    serve_sample fusion saves a dispatch *on top of* whichever sampler
+    backend wins here.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import interpret_mode
+    from repro.kernels.fused_sampler.ops import fused_sample
+    from repro.models import attention as A
+    from repro.serving.sampling import sample_tokens
+
+    if include_pallas is None:
+        include_pallas = not interpret_mode()
+    rng = np.random.default_rng(seed)
+    B, H, K, D, W = slots, q_heads, kv_heads, head_dim, max_len
+    bs = kv_block_size
+    if W % bs:
+        raise ValueError(f"max_len {W} is not a multiple of kv_block_size "
+                         f"{bs}")
+    M = W // bs
+    P = B * M
+    f32 = jnp.float32
+    out: dict[str, float] = {}
+
+    # decode_dense ----------------------------------------------------------
+    q = jnp.asarray(rng.normal(size=(B, H, D)), f32)
+    kc = jnp.asarray(rng.normal(size=(B, W, K, D)), f32)
+    vc = jnp.asarray(rng.normal(size=(B, W, K, D)), f32)
+    valid = jnp.asarray(rng.integers(0, 2, (B, W)).astype(bool))
+    for backend in ("xla",) + (("pallas",) if include_pallas else ()):
+        fn = jax.jit(lambda q, k, v, m, _b=backend:
+                     A.decode_attention(q, k, v, m, _b))
+        out[f"decode_dense:{backend}"] = _time_call(fn, q, kc, vc, valid,
+                                                    iters=iters)
+
+    # decode_paged ----------------------------------------------------------
+    kp = jnp.asarray(rng.normal(size=(P, bs, K, D)), f32)
+    vp = jnp.asarray(rng.normal(size=(P, bs, K, D)), f32)
+    tables = jnp.asarray(
+        np.stack([rng.permutation(P)[:M] for _ in range(B)]), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, W + 1, (B,)), jnp.int32)
+    for backend in ("gather", "fold") + (("pallas",)
+                                         if include_pallas else ()):
+        fn = jax.jit(lambda q, k, v, t, n, _b=backend:
+                     A.decode_attention_paged(q, k, v, t, n, _b))
+        out[f"decode_paged:{backend}"] = _time_call(
+            fn, q, kp, vp, tables, lengths, iters=iters)
+
+    # sampler ---------------------------------------------------------------
+    logits = jnp.asarray(rng.normal(size=(B, vocab)), f32)
+    seeds = jnp.asarray(rng.integers(0, 2**31, (B,)), jnp.uint32)
+    steps = jnp.zeros((B,), jnp.int32)
+    temps = jnp.full((B,), 0.8, f32)
+    ks = jnp.full((B,), 40, jnp.int32)
+    ps = jnp.full((B,), 0.9, f32)
+    ref = jax.jit(lambda *a: sample_tokens(*a, vocab=vocab))
+    out["sampler:reference"] = _time_call(ref, logits, seeds, steps, temps,
+                                          ks, ps, iters=iters)
+    out["sampler:fused"] = _time_call(
+        lambda *a: fused_sample(*a, vocab=vocab, backend="jnp"),
+        logits, seeds, steps, temps, ks, ps, iters=iters)
+    if include_pallas:
+        out["sampler:pallas"] = _time_call(
+            lambda *a: fused_sample(*a, vocab=vocab, backend="pallas"),
+            logits, seeds, steps, temps, ks, ps, iters=iters)
+    return out
+
+
+def save_timings(path: str, timings: dict[str, float],
+                 meta: dict | None = None) -> None:
+    """Persist a kernel-site timings cache (JSON) for later plan runs."""
+    with open(path, "w") as f:
+        json.dump({"timings": timings, "meta": meta or {}}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+
+
+def load_timings(path: str) -> dict[str, float]:
+    """Load a timings cache written by :func:`save_timings`; ``{}`` when the
+    file does not exist (callers fall back to the roofline heuristics)."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        data = json.load(f)
+    return {str(k): float(v) for k, v in data.get("timings", {}).items()}
 
 
 def main(argv=None):

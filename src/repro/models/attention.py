@@ -180,14 +180,18 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     valid: jax.Array, use_pallas: bool = False) -> jax.Array:
+                     valid: jax.Array, backend: str = "xla") -> jax.Array:
     """One-token attention over a cache.
 
     q: (B,H,D); caches: (B,W,K,D); valid: (B,W) bool mask of live slots.
+    ``backend`` is the ``decode_dense`` site of a ``KernelPlan``:
+    ``"xla"`` (einsum + softmax) or ``"pallas"`` (flash-decode kernel).
     """
-    if use_pallas:
+    if backend == "pallas":
         from repro.kernels.decode_attention import ops as dec_ops
         return dec_ops.gqa_decode(q, k_cache, v_cache, valid)
+    if backend != "xla":
+        raise ValueError(f"unknown decode_dense backend {backend!r}")
     B, H, D = q.shape
     K = k_cache.shape[2]
     G = H // K
@@ -202,7 +206,7 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def decode_attention_paged(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_tables: jax.Array,
                            lengths: jax.Array,
-                           use_pallas: bool = False) -> jax.Array:
+                           backend: str = "gather") -> jax.Array:
     """One-token attention over a block-paged cache.
 
     q: (B,H,D); pools: (P,bs,K,D); block_tables: (B,M) int32 physical block
@@ -210,13 +214,69 @@ def decode_attention_paged(q: jax.Array, k_pool: jax.Array,
     The logical axis is ``M*bs`` wide with position ``p`` at index ``p`` —
     the same layout (and therefore the same masked reductions) as the dense
     ring buffer, which is what keeps paged and dense decode bit-identical.
+
+    ``backend`` is the ``decode_paged`` site of a ``KernelPlan``:
+    ``"gather"`` materializes the dense per-request K/V view through the
+    block table; ``"fold"`` replaces the dynamic-index K gather with a
+    one-hot contraction XLA fuses into the scores
+    (:func:`_paged_fold_attention`, bit-identical to gather); ``"pallas"``
+    is the scalar-prefetched flash-decode kernel.
     """
-    if use_pallas:
+    if backend == "pallas":
         from repro.kernels.decode_attention import ops as dec_ops
         return dec_ops.gqa_decode_paged(q, k_pool, v_pool, block_tables,
                                         lengths)
+    if backend == "fold":
+        return _paged_fold_attention(q, k_pool, v_pool, block_tables,
+                                     lengths)
+    if backend != "gather":
+        raise ValueError(f"unknown decode_paged backend {backend!r}")
     k, v = paged_kv_view(k_pool, v_pool, block_tables)
     W = k.shape[1]
+    valid = jnp.arange(W)[None, :] < lengths[:, None]
+    return decode_attention(q, k, v, valid)
+
+
+def _paged_fold_attention(q: jax.Array, k_pool: jax.Array,
+                          v_pool: jax.Array, block_tables: jax.Array,
+                          lengths: jax.Array) -> jax.Array:
+    """Paged decode with the block-table K gather folded into a contraction.
+
+    The gather path dispatches a dynamic-index ``take`` per pool to build
+    the (B, M*bs, K, D) view — on CPU that scalarized copy is the paged
+    layout's main overhead over dense.  Here the K view is instead
+    *computed* as a one-hot contraction over the physical-block axis, a
+    dense matmul XLA fuses into the decode step: each output row sums
+    exactly one pool row and P-1 true float zeros, which is bit-exact
+    under any reduction order (``x + 0.0 == x``; a ``-0.0`` element may
+    flip to ``+0.0``, which no downstream reduction can distinguish —
+    scores at worst flip zero sign, and softmax maps both to the same
+    weight).  Every contraction after the select uses the *same einsum
+    shapes* as :func:`decode_attention`'s XLA path, so the reduction
+    bracketing — and therefore the output bits — match the gather path
+    exactly, keeping fold inside the paged==dense bitwise oracle.  (A
+    "true" two-level fold that scores the query against all pool blocks
+    and selects afterwards reduces over D in a different operand shape;
+    XLA brackets that reduction differently and the scores drift by an
+    ulp, so it cannot sit behind the bitwise-equivalence guarantee.)
+
+    V is still take-gathered: the PV contraction needs it row-major and
+    its gather sits on the same op as the gather path, so the folded
+    variant halves the dynamic-index traffic rather than doubling the
+    select matmuls.  Unassigned table entries (-1) select nothing: their
+    K rows are exact zeros, then masked by ``lengths`` exactly like the
+    gather path masks its garbage block-0 rows.
+    """
+    B, H, D = q.shape
+    P, bs, K, _ = k_pool.shape
+    M = block_tables.shape[1]
+    W = M * bs
+    onehot = ((block_tables[:, :, None] == jnp.arange(P)[None, None, :])
+              & (block_tables >= 0)[:, :, None]).astype(k_pool.dtype)
+    k = jnp.einsum("bmp,pskd->bmskd", onehot,
+                   k_pool).reshape(B, W, K, D)   # exact one-hot select
+    bt = jnp.maximum(block_tables, 0)
+    v = v_pool[bt].reshape(B, W, *v_pool.shape[2:])
     valid = jnp.arange(W)[None, :] < lengths[:, None]
     return decode_attention(q, k, v, valid)
 
@@ -351,7 +411,8 @@ def attention_block(p: dict[str, jax.Array], x: jax.Array, *,
 def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
                            cache: KVCache, *, cfg,
                            cross_kv: tuple[jax.Array, jax.Array] | None = None,
-                           use_pallas: bool = False,
+                           dense_backend: str = "xla",
+                           paged_backend: str = "gather",
                            live: jax.Array | None = None
                            ) -> tuple[jax.Array, KVCache]:
     """One decode step.  x: (B, 1, d).  Updates the ring-buffer (or paged)
@@ -360,6 +421,10 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
     RoPE is applied at *write* time (k cached post-rotation, standard decode
     practice): absolute-position rotation of both q and k preserves the
     relative property, so the ring buffer never needs re-rotation.
+
+    ``dense_backend`` / ``paged_backend`` are the ``decode_dense`` /
+    ``decode_paged`` sites of a ``KernelPlan`` — whichever matches the
+    cache type dispatches; cross-attention always decodes dense.
 
     ``live`` ((B,) bool) only matters for a :class:`PagedKVCache`: dead
     rows' pool writes are dropped and their lengths frozen (the dense path
@@ -377,7 +442,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
             q = rms_norm(q, p["q_norm"])
         k_c, v_c = cross_kv
         valid = jnp.ones(k_c.shape[:2], bool)
-        out = decode_attention(q, k_c, v_c, valid, use_pallas)
+        out = decode_attention(q, k_c, v_c, valid, dense_backend)
         return jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))[:, None], cache
 
     k_new = _project(p, x, "wk")[:, 0]         # (B, K, D)
@@ -392,7 +457,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
 
     if isinstance(cache, PagedKVCache):
         y, new_cache = _paged_decode_write_attend(
-            q, k_new, v_new, cache, live=live, use_pallas=use_pallas)
+            q, k_new, v_new, cache, live=live, backend=paged_backend)
         return jnp.einsum("bhk,hkd->bd", y,
                           p["wo"].astype(x.dtype))[:, None], new_cache
 
@@ -406,7 +471,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
     valid = positions >= 0
     if cfg.sliding_window:
         valid &= positions > (pos[:, None] - cfg.sliding_window)
-    out = decode_attention(q, k_cache, v_cache, valid, use_pallas)
+    out = decode_attention(q, k_cache, v_cache, valid, dense_backend)
     new_cache = KVCache(k=k_cache, v=v_cache, positions=positions,
                         length=cache.length + 1)
     y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
@@ -416,7 +481,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
 def _paged_decode_write_attend(q: jax.Array, k_new: jax.Array,
                                v_new: jax.Array, cache: PagedKVCache, *,
                                live: jax.Array | None,
-                               use_pallas: bool = False
+                               backend: str = "gather"
                                ) -> tuple[jax.Array, PagedKVCache]:
     """Scatter one token's K/V into the pool and attend over the pages.
 
@@ -441,7 +506,7 @@ def _paged_decode_write_attend(q: jax.Array, k_new: jax.Array,
         v_new.astype(cache.v.dtype), mode="drop")
     new_len = jnp.where(ok, pos + 1, pos).astype(jnp.int32)
     out = decode_attention_paged(q, k_pool, v_pool, cache.block_tables,
-                                 new_len, use_pallas)
+                                 new_len, backend)
     return out, PagedKVCache(k=k_pool, v=v_pool,
                              block_tables=cache.block_tables, length=new_len)
 

@@ -37,12 +37,17 @@ class TrainState(NamedTuple):
 
 class Model:
     def __init__(self, cfg: ModelConfig, mesh=None,
-                 rules: dict | None = None, use_pallas: bool = False,
+                 rules: dict | None = None, kernel_plan=None,
                  opt_cfg: AdamWConfig | None = None):
+        from repro.core.pipeline import KernelPlan
         self.cfg = cfg
         self.mesh = mesh
         self.rules = SH.rules_for(cfg, mesh, rules) if mesh is not None else {}
-        self.use_pallas = use_pallas
+        #: per-site backend routing (core.pipeline.KernelPlan); the default
+        #: plan is the pure-XLA seed path.  serve_step/verify_step accept a
+        #: per-call override so one Model serves several plans.
+        self.kernel_plan = kernel_plan if kernel_plan is not None \
+            else KernelPlan()
         self.dtype = _DTYPES[cfg.dtype]
         self.param_dtype = _DTYPES[cfg.param_dtype]
         self.opt_cfg = opt_cfg or AdamWConfig(moment_dtype=cfg.opt_dtype)
@@ -339,7 +344,8 @@ class Model:
         logits = unembed(params["embed"]["tokens"], x)[:, 0]
         return logits, new_caches
 
-    def serve_step(self, params, caches, tokens, batch_axes=(), live=None):
+    def serve_step(self, params, caches, tokens, batch_axes=(), live=None,
+                   plan=None):
         """One decode step.  tokens: (B, 1) -> (logits (B, V), new caches).
 
         ``live`` (B,) bool keeps non-live rows' caches untouched: slots that
@@ -347,13 +353,18 @@ class Model:
         without their ring buffers advancing.  With paged caches the mask
         acts at the pool scatter itself (a dense restore-by-row would also
         roll back blocks another row legitimately wrote).
+
+        ``plan`` (a ``KernelPlan``) overrides ``self.kernel_plan`` for this
+        call — the serving engine threads the routed plan through here.
         """
         cfg = self.cfg
+        plan = plan if plan is not None else self.kernel_plan
         paged = self._is_paged(caches)
         x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
         x, new_caches = T.decoder_stack_decode(
             params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
-            batch_axes=batch_axes, use_pallas=self.use_pallas,
+            batch_axes=batch_axes, dense_backend=plan.decode_dense,
+            paged_backend=plan.decode_paged,
             live=live if paged else None)
         if live is not None and not paged:
             def keep(new, old):
@@ -365,7 +376,7 @@ class Model:
         return logits, new_caches
 
     def verify_step(self, params, caches, tokens, n_new, batch_axes=(),
-                    live=None):
+                    live=None, plan=None):
         """Speculative verify: score ``K1 = k+1`` positions per row in one
         dispatch.  tokens: (B, K1) = per row ``[pending, draft_1..draft_k]``
         right-padded; n_new: (B,) valid positions (0 = bystander row).
@@ -383,6 +394,7 @@ class Model:
         an ulp — not good enough for the bitwise oracle.
         """
         cfg = self.cfg
+        plan = plan if plan is not None else self.kernel_plan
         if not cfg.attention_only or cfg.sliding_window:
             raise NotImplementedError(
                 "speculative verify needs a full-attention family (rollback "
@@ -400,7 +412,8 @@ class Model:
                              self.dtype)
             x, new_caches = T.decoder_stack_decode(
                 params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
-                batch_axes=batch_axes, use_pallas=self.use_pallas,
+                batch_axes=batch_axes, dense_backend=plan.decode_dense,
+                paged_backend=plan.decode_paged,
                 live=step_live if paged else None)
             if not paged:
                 def keep(new, old):

@@ -84,7 +84,7 @@ def _cross_kv(p, enc_out):
 
 
 def decoder_layer(p, x, *, cfg, mesh=None, batch_axes=("data",),
-                  enc_out=None, causal: bool = True, use_pallas: bool = False):
+                  enc_out=None, causal: bool = True):
     """x: (B, S, d) -> (y, aux_loss)."""
     fam = cfg.family
     aux = jnp.zeros((), jnp.float32)
@@ -215,17 +215,23 @@ def init_paged_layer_cache(cfg, batch: int, pool_blocks: int,
 
 
 def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
-                         batch_axes=(), use_pallas: bool = False,
-                         live=None):
-    """One-token decode through one layer.  x: (B, 1, d).  ``live`` is
-    forwarded to the attention block for paged caches (dead rows must not
-    scatter into shared pool blocks); dense callers mask post hoc."""
+                         batch_axes=(), dense_backend: str = "xla",
+                         paged_backend: str = "gather", live=None):
+    """One-token decode through one layer.  x: (B, 1, d).
+
+    ``dense_backend`` / ``paged_backend`` are the attention sites of the
+    engine's ``KernelPlan`` (threaded down from ``Model.serve_step``).
+    ``live`` is forwarded to the attention block for paged caches (dead
+    rows must not scatter into shared pool blocks); dense callers mask
+    post hoc."""
     fam = cfg.family
     h = rms_norm(x, p["norm1"])
     new = cache
     if fam == "hybrid":
         att, kv = A.attention_decode_block(p["attn"], h, cache.kv, cfg=cfg,
-                                           use_pallas=use_pallas, live=live)
+                                           dense_backend=dense_backend,
+                                           paged_backend=paged_backend,
+                                           live=live)
         ssm_o, sc = S.mamba2_decode(p["ssm"], h, cache.ssm, cfg=cfg)
         x = x + 0.5 * (att * p["attn_scale"].astype(x.dtype)
                        + ssm_o * p["ssm_scale"].astype(x.dtype))
@@ -235,14 +241,16 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
         return x + y, new._replace(ssm=sc)
     else:
         att, kv = A.attention_decode_block(p["attn"], h, cache.kv, cfg=cfg,
-                                           use_pallas=use_pallas, live=live)
+                                           dense_backend=dense_backend,
+                                           paged_backend=paged_backend,
+                                           live=live)
         x = x + att
         new = new._replace(kv=kv)
     if cfg.is_encoder_decoder and not isinstance(cache.cross_k, tuple):
         hc = rms_norm(x, p["norm_cross"])
         y, _ = A.attention_decode_block(p["cross_attn"], hc, cache.kv, cfg=cfg,
                                         cross_kv=(cache.cross_k, cache.cross_v),
-                                        use_pallas=use_pallas)
+                                        dense_backend=dense_backend)
         x = x + y
     h2 = rms_norm(x, p["norm2"]) if fam != "ssm" else None
     if fam == "moe":
@@ -259,14 +267,17 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
 
 
 def decoder_stack_decode(stacked, x, caches, *, cfg, mesh=None, batch_axes=(),
-                         use_pallas: bool = False, live=None):
+                         dense_backend: str = "xla",
+                         paged_backend: str = "gather", live=None):
     """caches: LayerCache pytree with a leading layer axis on every leaf."""
 
     def body(carry, inp):
         lp, cache = inp
         y, new_cache = decoder_layer_decode(lp, carry, cache, cfg=cfg,
                                             mesh=mesh, batch_axes=batch_axes,
-                                            use_pallas=use_pallas, live=live)
+                                            dense_backend=dense_backend,
+                                            paged_backend=paged_backend,
+                                            live=live)
         return y, new_cache
 
     x, new_caches = scan_or_unroll(body, x, (stacked, caches),

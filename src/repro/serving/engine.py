@@ -22,6 +22,14 @@ seed) with keys derived only from that request's seed and emitted-token
 count — so sampled output is independent of slot assignment and batch
 composition, and ``greedy`` is simply the temperature-0 default policy.
 
+Every hot-path dispatch routes through a :class:`KernelPlan`
+(``core.pipeline``): by default the ``kernel_select`` pass picks a backend
+per site (decode attention dense/paged, sampler, ...) from the roofline
+cost model and any measured timings; under a fused-sampler plan the
+decode step and the sampler compile into a *single* jitted dispatch
+(``serve_sample``), token-identical to the reference path.  Pass
+``kernel_plan="off"`` for the seed path or an explicit plan to pin one.
+
 The KV caches are the engine's state; every dispatch updates slot rows in
 place, so retire/refill never copies surviving requests.  With
 ``kv="paged"`` the dense per-slot rows are replaced by a block pool
@@ -47,7 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pipeline import StageTimer
+from repro.core.pipeline import KernelPlan, StageTimer
+from repro.kernels.fused_sampler.ops import fused_sample, fused_sample_grid
 
 from .kv_pool import KVBlockPool, PoolConfig
 from .sampling import SamplingParams, sample_token_grid, sample_tokens
@@ -80,37 +89,73 @@ def settle_ticks(prompt_len: int, chunk: int) -> int:
     return 2 * max(1, -(-prompt_len // max(chunk, 1))) + 1
 
 
-def _serving_jits(model, max_len: int) -> dict:
+def _serving_jits(model, max_len: int, plan: KernelPlan) -> dict:
     """Jitted serving steps, cached **on the model**: every engine over the
     same model shares one compiled prefill/chunk/decode/reset/sample, so
-    spinning up an engine (benchmarks do it per policy) never recompiles."""
+    spinning up an engine (benchmarks do it per policy) never recompiles.
+    Keyed on ``(max_len, plan)`` — a :class:`KernelPlan` is frozen and
+    hashable, and every dispatch below routes through it.
+
+    The plan's ``sampler`` site picks the sampling lowering:
+
+      * ``"reference"`` — the seed path: two-sort ``sample_tokens`` in its
+        own dispatch after decode;
+      * ``"fused"`` / ``"pallas"`` — the fused-sampler kernel package
+        (one-sort jnp / Pallas threshold kernel), plus a ``serve_sample``
+        entry that fuses decode and sampling into a *single* jitted
+        dispatch — the per-tick dispatch overhead, not the sort FLOPs, is
+        what dominates sampling cost at serving vocab sizes.
+    """
     cache = getattr(model, "_serving_jit_cache", None)
     if cache is None:
         cache = {}
         model._serving_jit_cache = cache
-    if max_len not in cache:
-        cache[max_len] = {
+    key = (max_len, plan)
+    if key not in cache:
+        vocab = model.cfg.vocab
+        if plan.sampler == "reference":
+            sample = jax.jit(functools.partial(sample_tokens, vocab=vocab))
+            sample_grid = jax.jit(
+                functools.partial(sample_token_grid, vocab=vocab))
+            serve_sample = None
+        else:
+            backend = "pallas" if plan.sampler == "pallas" else "jnp"
+            sample = functools.partial(fused_sample, vocab=vocab,
+                                       backend=backend)
+            sample_grid = functools.partial(fused_sample_grid, vocab=vocab,
+                                            backend=backend)
+
+            @jax.jit
+            def serve_sample(p, c, t, live, seeds, steps, temps, ks, ps):
+                logits, new_c = model.serve_step(p, c, t, live=live,
+                                                 plan=plan)
+                toks = fused_sample(logits, seeds, steps, temps, ks, ps,
+                                    vocab=vocab, backend=backend)
+                return toks, new_c
+
+        cache[key] = {
             "serve": jax.jit(
-                lambda p, c, t, live: model.serve_step(p, c, t, live=live)),
+                lambda p, c, t, live: model.serve_step(p, c, t, live=live,
+                                                       plan=plan)),
             "prefill": jax.jit(
                 lambda p, b: model.prefill_step(p, b, max_len=max_len)),
             "chunk": jax.jit(
                 lambda p, c, t, off, nn: model.prefill_chunk(p, c, t, off, nn)),
             "reset": jax.jit(
                 lambda c, rows: model.reset_cache_rows(c, rows)),
-            "sample": jax.jit(
-                functools.partial(sample_tokens, vocab=model.cfg.vocab)),
+            "sample": sample,
+            "serve_sample": serve_sample,
             # speculative decoding (jax.jit re-traces per distinct verify
             # width K1, bounded by the closed spec-k candidate set)
             "verify": jax.jit(
-                lambda p, c, t, nn: model.verify_step(p, c, t, nn)),
+                lambda p, c, t, nn: model.verify_step(p, c, t, nn,
+                                                      plan=plan)),
             "rollback": jax.jit(
                 lambda c, keep, rows: model.rollback_cache_rows(
                     c, keep, rows)),
-            "sample_grid": jax.jit(
-                functools.partial(sample_token_grid, vocab=model.cfg.vocab)),
+            "sample_grid": sample_grid,
         }
-    return cache[max_len]
+    return cache[key]
 
 
 class ServingEngine:
@@ -122,7 +167,9 @@ class ServingEngine:
                  kv_block_size: int | None = None,
                  kv_pool_blocks: int | None = None,
                  spec: SpecParams | None = None, spec_k_max: int = 16,
-                 draft_model=None, draft_params=None):
+                 draft_model=None, draft_params=None,
+                 kernel_plan: KernelPlan | str | None = None,
+                 kernel_timings: dict | None = None):
         if kv not in ("dense", "paged"):
             raise ValueError(f"unknown kv mode {kv!r}; have dense|paged")
         self.model = model
@@ -201,16 +248,60 @@ class ServingEngine:
             self._init_paged_kv(kv_block_size, kv_pool_blocks)
         else:
             self.caches = model.init_caches(slots, max_len)
+        self._kernel_report = None  # PassReport when the plan was routed
+        self.kernel_plan = self._resolve_kernel_plan(kernel_plan,
+                                                     kernel_timings)
+        self.scheduler.kernel_plan = self.kernel_plan.as_dict()
         self._last_tokens = jnp.zeros((slots, 1), jnp.int32)
-        jits = _serving_jits(model, max_len)
+        jits = _serving_jits(model, max_len, self.kernel_plan)
         self._serve = jits["serve"]
         self._prefill = jits["prefill"]
         self._chunk_step = jits["chunk"]
         self._reset_rows = jits["reset"]
         self._sample_step = jits["sample"]
+        self._serve_sample = jits["serve_sample"]
         self._verify = jits["verify"]
         self._rollback = jits["rollback"]
         self._sample_grid_step = jits["sample_grid"]
+
+    def _resolve_kernel_plan(self, kernel_plan, timings) -> KernelPlan:
+        """Resolve the engine's per-site kernel routing.
+
+        ``None`` (the default) runs the ``kernel_select`` pass over the
+        scheduler's proxy graph — the roofline model plus any measured
+        timings (``tools/kernel_tune.py``) pick a backend per site, and
+        the decision lands in a PassReport (``stats()["kernel_report"]``).
+        ``"off"`` pins the seed path (``KernelPlan()``); an explicit
+        :class:`KernelPlan` is honored as given.
+        """
+        if kernel_plan == "off":
+            return KernelPlan()
+        if kernel_plan is not None:
+            if not isinstance(kernel_plan, KernelPlan):
+                raise ValueError(
+                    f"kernel_plan must be a KernelPlan, 'off' or None, "
+                    f"got {kernel_plan!r}")
+            return kernel_plan
+        from repro.core import pipeline
+        cfg = self.model.cfg
+        options = {
+            "accelerator": jax.default_backend(),
+            "slots": self.slots, "max_len": self.max_len,
+            "q_heads": cfg.n_heads, "kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.resolved_head_dim,
+        }
+        if self.pool is not None:
+            options["kv_block_size"] = self.pool.cfg.block_size
+            options["kv_pool_blocks"] = self.pool.cfg.pool_blocks
+        if timings:
+            options["timings"] = dict(sorted(timings.items()))
+        _, report = pipeline.optimize(self.scheduler.plan_graph,
+                                      passes=("kernel_select",),
+                                      options=options)
+        self._kernel_report = report
+        summary = report.passes[-1].summary
+        return KernelPlan(**{site: summary[site]
+                             for site in KernelPlan().as_dict()})
 
     @staticmethod
     def _check_spec_model(cfg) -> None:
@@ -634,10 +725,21 @@ class ServingEngine:
         for slot in plan.decode_slots:
             live[slot] = True
             rows[slot] = self.scheduler.active[slot]
-        logits, self.caches = self._serve(self.params, self.caches,
-                                          self._last_tokens,
-                                          jnp.asarray(live))
-        toks = self._sample(logits, rows)
+        if self._serve_sample is not None:
+            # fused-sampler plan: decode + sampling in ONE jitted dispatch
+            # (the fused sampler's draw handles temperature-0 rows as
+            # argmax internally, so greedy needs no separate shortcut)
+            seeds, steps, temps, ks, ps = self._sampling_arrays(rows)
+            toks, self.caches = self._serve_sample(
+                self.params, self.caches, self._last_tokens,
+                jnp.asarray(live), jnp.asarray(seeds), jnp.asarray(steps),
+                jnp.asarray(temps), jnp.asarray(ks), jnp.asarray(ps))
+            toks = np.asarray(jax.block_until_ready(toks))
+        else:
+            logits, self.caches = self._serve(self.params, self.caches,
+                                              self._last_tokens,
+                                              jnp.asarray(live))
+            toks = self._sample(logits, rows)
         for slot in plan.decode_slots:
             t = int(toks[slot])
             self.tokens_out += 1
@@ -647,13 +749,14 @@ class ServingEngine:
         return len(plan.decode_slots)
 
     # -- sampling -------------------------------------------------------------
-    def _sample(self, logits: jax.Array, rows) -> np.ndarray:
-        """One batched sampling dispatch over ``(B, V)`` logits.  ``rows``
-        aligns each logits row with its ScheduledRequest (None = bystander
-        row, sampled under the default policy and discarded).  Each row's
-        key depends only on its request's seed and emitted-token count, so
-        results don't change with slot assignment or batch composition."""
-        B = int(logits.shape[0])
+    def _sampling_arrays(self, rows):
+        """Per-slot sampling policy arrays for one batched dispatch.
+        ``rows`` aligns each batch row with its ScheduledRequest (None =
+        bystander row, sampled under the default policy and discarded).
+        Each row's key depends only on its request's seed and
+        emitted-token count, so results don't change with slot assignment
+        or batch composition."""
+        B = len(rows)
         seeds = np.zeros((B,), np.uint32)
         steps = np.zeros((B,), np.int32)
         temps = np.zeros((B,), np.float32)
@@ -668,6 +771,12 @@ class ServingEngine:
             temps[i] = sp.temperature
             ks[i] = sp.top_k
             ps[i] = sp.top_p
+        return seeds, steps, temps, ks, ps
+
+    def _sample(self, logits: jax.Array, rows) -> np.ndarray:
+        """One batched sampling dispatch over ``(B, V)`` logits (the
+        prefill paths, and decode under the reference-sampler plan)."""
+        seeds, steps, temps, ks, ps = self._sampling_arrays(rows)
         if not temps.any():
             # all-greedy batch: plain argmax, skip the sort/cumsum sampler
             toks = jnp.argmax(logits[..., :self.model.cfg.vocab],
@@ -684,21 +793,7 @@ class ServingEngine:
         the plain decode path would use emitting those tokens one tick at
         a time (``sample_token_grid``), which is what makes speculative
         sampled streams identical, not merely equal in distribution."""
-        B = int(logits.shape[0])
-        seeds = np.zeros((B,), np.uint32)
-        steps = np.zeros((B,), np.int32)
-        temps = np.zeros((B,), np.float32)
-        ks = np.zeros((B,), np.int32)
-        ps = np.ones((B,), np.float32)
-        for i, sreq in enumerate(rows):
-            if sreq is None:
-                continue
-            sp = sreq.req.sampling or self.default_sampling
-            seeds[i] = np.uint32(sp.seed & 0xFFFFFFFF)
-            steps[i] = len(sreq.req.generated)
-            temps[i] = sp.temperature
-            ks[i] = sp.top_k
-            ps[i] = sp.top_p
+        seeds, steps, temps, ks, ps = self._sampling_arrays(rows)
         if not temps.any():
             toks = jnp.argmax(logits[..., :self.model.cfg.vocab],
                               axis=-1).astype(jnp.int32)
@@ -744,7 +839,10 @@ class ServingEngine:
                "plan": dict(self.scheduler.last_plan),
                "scheduler": self.scheduler.state_counts(),
                "prefill_mode": self.scheduler.cfg.prefill_mode,
-               "kv": self.kv}
+               "kv": self.kv,
+               "kernel_plan": self.kernel_plan.as_dict()}
+        if self._kernel_report is not None:
+            out["kernel_report"] = self._kernel_report.as_dict()
         if self.pool is not None:
             out["kv_pool"] = self.pool.stats()
             out["prefill_tokens_saved"] = self.pool.tokens_saved

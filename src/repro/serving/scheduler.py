@@ -159,6 +159,11 @@ class Scheduler:
         #: — forwarded to the serve_schedule pass so replans plan ``spec_k``
         #: from the observed acceptance rate.
         self.spec_mode = "off"
+        #: the engine's resolved KernelPlan (as a site->backend dict) —
+        #: forwarded to the serve_schedule pass so every replanned plan
+        #: carries the routing it was planned under; the dict is fixed at
+        #: engine construction, so replans still hit the optimize() cache.
+        self.kernel_plan: dict[str, str] | None = None
         #: paged-KV hooks, set by the engine when it runs a block pool:
         #: ``kv_gate(sreq, victim=None)`` — may this request be admitted
         #: given free blocks (counting the victim's, when preempting)?;
@@ -401,6 +406,8 @@ class Scheduler:
         }
         if self.kv_mode != "dense":
             options["kv"] = self.kv_mode
+        if self.kernel_plan:
+            options["kernel_plan"] = dict(sorted(self.kernel_plan.items()))
         if self.spec_mode != "off":
             options["spec"] = self.spec_mode
             # -1 = no verified drafts yet: the pass starts optimistic and

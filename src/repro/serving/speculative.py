@@ -162,8 +162,13 @@ class DraftModelProposer:
         self.caches = model.init_caches(slots, max_len)
         self.synced = np.zeros((slots,), np.int64)   # context tokens cached
         self.rids = np.full((slots,), -1, np.int64)  # owning request per row
+        from repro.core.pipeline import KernelPlan
+
         from .engine import _serving_jits  # shared jit cache on the model
-        jits = _serving_jits(model, max_len)
+        # the draft runs on the seed kernel plan: its greedy proposals are
+        # verified against the target, so routing buys nothing here and a
+        # fixed plan keeps the proposer's jits shared across engines
+        jits = _serving_jits(model, max_len, KernelPlan())
         self._chunk = jits["chunk"]
         self._serve = jits["serve"]
         self._reset = jits["reset"]

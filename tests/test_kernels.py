@@ -159,7 +159,8 @@ def test_gqa_decode_property_masking(w, frac, seed):
 
 
 def test_engine_pallas_path_matches():
-    """Engine use_pallas=True (linked cbra via kernel) == pure-jnp engine."""
+    """Engine under a pallas linked_matmul plan (cbra via kernel) == the
+    pure-jnp seed-plan engine."""
     from repro.core import Graph, execute, init_params, optimize
     from repro.core import graph as G
     g = Graph("cbra_net")
@@ -173,7 +174,9 @@ def test_engine_pallas_path_matches():
     assert any(n.op_type == "cbra" for n in opt.nodes)
     params = init_params(g)
     inputs = {"x": RNG.normal(size=(1, 8, 8, 16)).astype("float32")}
-    a = execute(opt, params, inputs, mode="xenos", use_pallas=False)
-    b = execute(opt, params, inputs, mode="xenos", use_pallas=True)
+    from repro.core.pipeline import KernelPlan
+    a = execute(opt, params, inputs, mode="xenos")
+    b = execute(opt, params, inputs, mode="xenos",
+                plan=KernelPlan(linked_matmul="pallas"))
     np.testing.assert_allclose(np.asarray(a[0]), np.asarray(b[0]),
                                rtol=2e-5, atol=2e-5)

@@ -91,8 +91,8 @@ def test_paged_matches_dense_bitwise(n_heads, n_kv, rope_fraction, qk_norm):
 @pytest.mark.parametrize("n_heads,n_kv", [(4, 2), (8, 2)])
 @pytest.mark.parametrize("rope_fraction", [1.0, 0.5])
 def test_paged_decode_block_pallas_interpret(n_heads, n_kv, rope_fraction):
-    """attention_decode_block over a PagedKVCache with use_pallas=True
-    (interpret mode on CPU) matches the pure-jnp paged path."""
+    """attention_decode_block over a PagedKVCache with the pallas paged
+    backend (interpret mode on CPU) matches the pure-jnp gather path."""
     cfg = _cfg(n_heads, n_kv, rope_fraction)
     hd = cfg.resolved_head_dim
     rng = np.random.default_rng(5)
@@ -109,9 +109,9 @@ def test_paged_decode_block_pallas_interpret(n_heads, n_kv, rope_fraction):
         length=jnp.asarray(lengths))
     x = jnp.asarray(rng.normal(size=(B, 1, cfg.d_model)), jnp.float32)
     y_ref, kv_ref = A.attention_decode_block(p, x, kv, cfg=cfg,
-                                             use_pallas=False)
+                                             paged_backend="gather")
     y_pl, kv_pl = A.attention_decode_block(p, x, kv, cfg=cfg,
-                                           use_pallas=True)
+                                           paged_backend="pallas")
     np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
                                rtol=3e-5, atol=3e-5)
     np.testing.assert_array_equal(np.asarray(kv_pl.length),

@@ -228,6 +228,60 @@ def test_dxenos_plan_pass_annotates_schemes():
     assert planned, "compute ops must carry their per-op best scheme"
 
 
+def test_kernel_select_pass_annotates_plan():
+    """The kernel-routing lowering: a registered pass whose per-site
+    backend choices land on every node and in the PassReport, keyed by
+    accelerator — TPU routes everything to the Pallas kernels, hosts keep
+    XLA attention and the one-sort fused sampler."""
+    g = cnn_zoo.build("mobilenet")
+    opt, report = pipeline.optimize(
+        g, passes=("kernel_select",), options={"accelerator": "tpu"})
+    rec = report.passes[-1].summary
+    assert rec["sampler"] == "pallas" and rec["decode_dense"] == "pallas"
+    assert all(n.dataflow["kernel_plan"]["linked_matmul"] == "pallas"
+               for n in opt.nodes)
+    _, rep_cpu = pipeline.optimize(
+        g, passes=("kernel_select",),
+        options={"accelerator": "cpu", "slots": 4, "max_len": 64,
+                 "kv_block_size": 8, "kv_pool_blocks": 32})
+    cpu = rep_cpu.passes[-1].summary
+    assert cpu["decode_dense"] == "xla" and cpu["sampler"] == "fused"
+    assert cpu["decode_paged"] in ("gather", "fold")
+    # the roofline's gather-vs-fold decision detail rides in the report
+    assert set(cpu["decode_paged_modeled_s"]) == {"gather", "fold"}
+
+
+def test_kernel_select_measured_timings_override_roofline():
+    """A micro-benchmark cache entry beats the heuristic per site: feeding
+    inverted timings flips each choice, and the winning measurement is
+    echoed in the decision detail."""
+    base = {"accelerator": "cpu"}
+    plan, _ = pipeline.select_kernel_plan(base)
+    flipped, detail = pipeline.select_kernel_plan({
+        **base, "timings": {
+            "sampler:reference": 1e-6, "sampler:fused": 2e-6,
+            "decode_paged:gather": 5e-6, "decode_paged:fold": 1e-6,
+        }})
+    assert plan.sampler == "fused" and flipped.sampler == "reference"
+    assert flipped.decode_paged == "fold"
+    assert detail["sampler_measured_s"] == {"reference": 1e-6, "fused": 2e-6}
+    # unmeasured sites keep their heuristic choice
+    assert flipped.decode_dense == plan.decode_dense
+
+
+def test_kernel_plan_defaults_are_the_seed_path():
+    """``KernelPlan()`` is the pre-routing engine: XLA attention, gather
+    paged reads, the reference sampler — and unknown backends are
+    rejected at construction."""
+    plan = pipeline.KernelPlan()
+    assert plan.as_dict() == {
+        "decode_dense": "xla", "decode_paged": "gather",
+        "prefill_chunk": "xla", "linked_matmul": "xla",
+        "sampler": "reference"}
+    with pytest.raises(ValueError, match="decode_dense"):
+        pipeline.KernelPlan(decode_dense="cuda")
+
+
 def test_optimize_for_mode_matches_mode_passes():
     g = _tiny_graph()
     for mode, names in pipeline.MODE_PASSES.items():

@@ -154,7 +154,7 @@ def make_trace(seed: int, sampled: bool) -> Trace:
 
 def run_trace(model, params, trace: Trace, kv: str,
               spec: SpecParams | None = None,
-              draft=None) -> list[list[int]]:
+              draft=None, kernel_plan=None) -> list[list[int]]:
     spec_kw = {}
     if spec is not None:
         spec_kw = dict(spec=spec, spec_k_max=SPEC_K_MAX)
@@ -165,7 +165,8 @@ def run_trace(model, params, trace: Trace, kv: str,
                         replan_every=10_000, eos_id=trace.eos_id, kv=kv,
                         kv_block_size=BLOCK if kv == "paged" else None,
                         kv_pool_blocks=trace.pool_blocks
-                        if kv == "paged" else None, **spec_kw)
+                        if kv == "paged" else None,
+                        kernel_plan=kernel_plan, **spec_kw)
     reqs = []
     for rid, ev in enumerate(trace.events):
         for _ in range(ev.gap):
@@ -235,6 +236,54 @@ def test_sampled_trace_equivalence(fuzz_model, seed):
     their n-gram speculative replays (the Leviathan-coupling property)."""
     model, params = fuzz_model
     assert_equivalent(model, params, make_trace(seed, sampled=True))
+
+
+# -- the kernel-plan replay tier ----------------------------------------------
+#
+# The sweeps above run with the *auto* kernel plan (``kernel_plan=None``:
+# the kernel_select pass routes the fused sampler and the roofline-chosen
+# paged backend), so the routed path is already fuzzed against itself
+# across KV layouts.  This tier pins the routing down against the seed
+# path: ``kernel_plan="off"`` is the pre-routing engine (reference
+# two-sort sampler, gather paged backend), and every replay with the plan
+# enabled must emit bit-identical streams — greedy and seeded sampled,
+# both KV layouts.
+
+N_PLAN = max(N_GREEDY // 7, 2)
+
+
+@pytest.mark.parametrize("sampled", [False, True])
+@pytest.mark.parametrize("seed", range(30_000, 30_000 + N_PLAN))
+def test_kernel_plan_replay_matches_seed_path(fuzz_model, seed, sampled):
+    """Auto kernel plan (fused sampler + routed paged backend) replays the
+    seed path's streams bit for bit on both KV layouts."""
+    model, params = fuzz_model
+    trace = make_trace(seed, sampled=sampled)
+    for kv in ("dense", "paged"):
+        seed_path = run_trace(model, params, trace, kv, kernel_plan="off")
+        routed = run_trace(model, params, trace, kv)
+        assert routed == seed_path, (
+            f"kernel-plan divergence (kv={kv}, sampled={sampled}): "
+            f"seed={seed_path} routed={routed}")
+
+
+def test_auto_plan_actually_routes(fuzz_model):
+    """The replay tier is only meaningful if the auto plan *differs* from
+    the seed path: on every backend the sampler must route off the
+    reference, and the engine must expose the plan and the pass report."""
+    model, params = fuzz_model
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked", kv="paged",
+                        kv_block_size=BLOCK)
+    stats = eng.stats()
+    assert stats["kernel_plan"]["sampler"] in ("fused", "pallas")
+    assert "kernel_report" in stats
+    assert any(p["name"] == "kernel_select"
+               for p in stats["kernel_report"]["passes"])
+    off = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked",
+                        kernel_plan="off")
+    assert off.stats()["kernel_plan"]["sampler"] == "reference"
 
 
 #: draft-model smoke subset: enough traces to exercise accept *and*

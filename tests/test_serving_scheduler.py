@@ -476,6 +476,27 @@ def test_serve_schedule_plans_paged_pool_geometry():
     assert "kv_block_size" not in rep3.passes[-1].summary
 
 
+def test_kv_block_fallback_surfaced_in_pass_report():
+    """When no SERVE_KV_BLOCK_SIZES candidate tiles the horizon the pool
+    planner falls back to a tiny power-of-two block — that used to happen
+    silently, shipping a badly fragmenting geometry with no trace.  The
+    fallback must now be flagged in the plan and the PassReport."""
+    g = serve_plan_graph("x", 4, 256, 512, 512)
+    # max_len=20: none of (8, 16, 32) divides it -> fallback to 4
+    _, rep = pipeline.optimize(g, passes=("serve_schedule",),
+                               options={"slots": 4, "max_len": 20,
+                                        "kv": "paged"})
+    plan = rep.passes[-1].summary
+    assert plan["kv_block_fallback"] is True
+    assert plan["kv_block_size"] == 4
+    assert 20 % plan["kv_block_size"] == 0
+    # a tiling horizon never carries the flag
+    _, rep2 = pipeline.optimize(g, passes=("serve_schedule",),
+                                options={"slots": 4, "max_len": 128,
+                                         "kv": "paged"})
+    assert "kv_block_fallback" not in rep2.passes[-1].summary
+
+
 def test_scheduler_adopts_admit_preempt_and_replan_fields():
     cfg = SchedulerConfig(slots=4, max_len=128, chunk=8, replan_every=1,
                           preempt=3)

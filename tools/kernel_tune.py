@@ -1,0 +1,101 @@
+"""Micro-benchmark the serving kernel sites and print the routed plan.
+
+Runs ``launch.autotune.bench_kernel_sites`` for the given serving geometry
+— sweeping every ``SERVE_KV_BLOCK_SIZES`` candidate that tiles the horizon
+for the paged-decode site — persists the ``{"site:backend": seconds}``
+timings cache as JSON, and prints the :class:`KernelPlan` the
+``kernel_select`` pass derives from those measurements (a measured argmin
+overrides the roofline heuristic per site).
+
+A serving run can then consume the cache::
+
+    PYTHONPATH=src python tools/kernel_tune.py --out kernel_timings.json
+    # ... later ...
+    from repro.launch.autotune import load_timings
+    ServingEngine(..., kernel_timings=load_timings("kernel_timings.json"))
+
+Usage: PYTHONPATH=src python tools/kernel_tune.py [--slots N] [--max-len N]
+           [--q-heads N] [--kv-heads N] [--head-dim N] [--vocab N]
+           [--block-size N] [--iters N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.core.pipeline import SERVE_KV_BLOCK_SIZES, select_kernel_plan
+from repro.launch.autotune import bench_kernel_sites, save_timings
+
+
+def sweep(args) -> tuple[dict[str, float], dict[int, dict[str, float]]]:
+    """One bench per viable KV block size.  The returned flat timings dict
+    uses the engine's actual block size (``--block-size``, default: the
+    smallest candidate) for the paged site; the per-block-size sweep is
+    printed and persisted alongside so the geometry choice is visible."""
+    candidates = [b for b in SERVE_KV_BLOCK_SIZES if args.max_len % b == 0]
+    if not candidates:
+        candidates = [args.max_len]
+    block_size = args.block_size or candidates[0]
+    by_block: dict[int, dict[str, float]] = {}
+    for bs in sorted(set(candidates + [block_size])):
+        by_block[bs] = bench_kernel_sites(
+            slots=args.slots, max_len=args.max_len, q_heads=args.q_heads,
+            kv_heads=args.kv_heads, head_dim=args.head_dim,
+            kv_block_size=bs, vocab=args.vocab, iters=args.iters)
+    return dict(by_block[block_size]), by_block
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--q-heads", type=int, default=8)
+    ap.add_argument("--kv-heads", type=int, default=2)
+    ap.add_argument("--head-dim", type=int, default=64)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="KV block size the engine will actually run "
+                         "(default: smallest SERVE_KV_BLOCK_SIZES divisor)")
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--out", default=None,
+                    help="persist the timings cache JSON here")
+    args = ap.parse_args(argv)
+
+    timings, by_block = sweep(args)
+    print(f"kernel-site micro-benchmarks "
+          f"(backend={jax.default_backend()}, slots={args.slots}, "
+          f"max_len={args.max_len})")
+    for bs, t in sorted(by_block.items()):
+        print(f"  kv_block_size={bs}:")
+        for key, s in sorted(t.items()):
+            print(f"    {key:24s} {s * 1e6:10.1f} us")
+
+    block_size = args.block_size or min(by_block)
+    plan, detail = select_kernel_plan({
+        "accelerator": jax.default_backend(),
+        "slots": args.slots, "max_len": args.max_len,
+        "q_heads": args.q_heads, "kv_heads": args.kv_heads,
+        "head_dim": args.head_dim, "kv_block_size": block_size,
+        "kv_pool_blocks": args.slots * (args.max_len // block_size),
+        "timings": timings,
+    })
+    print(f"routed plan: {plan}")
+    for k, v in sorted(detail.items()):
+        print(f"  {k}: {v}")
+
+    if args.out:
+        save_timings(args.out, timings, meta={
+            "accelerator": jax.default_backend(), "slots": args.slots,
+            "max_len": args.max_len, "q_heads": args.q_heads,
+            "kv_heads": args.kv_heads, "head_dim": args.head_dim,
+            "vocab": args.vocab, "kv_block_size": block_size,
+            "by_block_size": {str(b): t for b, t in by_block.items()},
+            "plan": plan.as_dict(),
+        })
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
