@@ -70,7 +70,12 @@ tokens/s number on a shared box.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -78,8 +83,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, get_config
 from repro.models.model import Model
-from repro.serving import (Request, SamplingParams, ServingEngine,
-                           SpecParams, settle_ticks)
+from repro.serving import (ReplicaRouter, Request, SamplingParams,
+                           ServingEngine, SpecParams, settle_ticks)
 
 from .common import emit
 
@@ -270,6 +275,161 @@ def run_spec() -> dict[str, float]:
     return tps
 
 
+# -- device-count scaling (mesh shards + engine replicas) ---------------------
+#
+# Two orthogonal axes, recorded in ``BENCH_serving.json``:
+#
+#   * **mesh shards** (1/2/4 simulated CPU devices): each shard count runs
+#     in a *subprocess* with ``--xla_force_host_platform_device_count``
+#     (the device count is locked at first backend init).  On one physical
+#     core the forced devices timeshare it, so wall-clock does not improve
+#     — the honest scaling signal reported is the per-shard KV footprint
+#     (bytes/device drop 1/n, which is exactly what concat-TP buys an edge
+#     deployment) plus the measured tok/s for the record;
+#   * **replicas** (1/2/4 routed engines): weak scaling — the workload
+#     grows with the fleet so every replica decodes full batches.  The
+#     aggregate is the sum of per-replica busy-time decode rates: the
+#     fleet throughput when replicas own their devices (d-Xenos), the
+#     capacity projection when they timeshare one host.  Monotonic growth
+#     with replica count is the acceptance bar.
+
+SCALE_SHARDS = (1, 2, 4)
+SCALE_REPLICAS = (1, 2, 4)
+SCALE_REQS_PER_REPLICA = 2 * SLOTS   # two full admission waves per replica
+BENCH_JSON = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+
+#: every dim divisible by 4 shards (kv heads are the binding axis)
+_SHARD_BENCH = r"""
+import json, time
+import jax, numpy as np
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import Request, ServingEngine
+
+SHARDS = %(shards)d
+cfg = ModelConfig(name="scale-tiny", family="dense", n_layers=2,
+                  d_model=128, vocab=96, n_heads=8, n_kv_heads=4,
+                  d_ff=256, dtype="float32", param_dtype="float32")
+model = Model(cfg)
+params = model.init(jax.random.key(0))
+mesh = make_serving_mesh(SHARDS) if SHARDS > 1 else None
+
+def serve():
+    eng = ServingEngine(model, params, slots=2, max_len=64, chunk=8,
+                        prefill_mode="chunked", replan_every=10_000,
+                        kv="paged", kv_block_size=8, mesh=mesh)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 16)
+                    .astype(np.int32), max_new_tokens=8) for i in range(4)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return time.perf_counter() - t0, eng.stats()
+
+serve()                       # compile off the clock
+dt, stats = serve()
+kp = stats["kv_pool"]
+per_block = kp.get("per_shard", {}).get("block_bytes")
+if per_block is None:         # unsharded: dense per-block payload
+    import jax.numpy as jnp
+    per_block = (2 * kp["block_size"] * cfg.n_kv_heads
+                 * cfg.resolved_head_dim
+                 * jnp.dtype(cfg.dtype).itemsize)
+print("SCALE_JSON " + json.dumps({
+    "shards": SHARDS, "devices": len(jax.devices()), "wall_s": dt,
+    "decode_tokens_per_s": stats.get("decode_tokens_per_s", 0.0),
+    "kv_bytes_per_block_per_device": int(per_block)}))
+"""
+
+
+def _bench_shards(shards: int) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={shards}"
+    repo = Path(__file__).resolve().parent.parent
+    env["PYTHONPATH"] = str(repo / "src")
+    out = subprocess.run([sys.executable, "-c",
+                          _SHARD_BENCH % {"shards": shards}],
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert out.returncode == 0, f"shard bench failed:\n{out.stderr}"
+    line = next(l for l in out.stdout.splitlines()
+                if l.startswith("SCALE_JSON "))
+    return json.loads(line[len("SCALE_JSON "):])
+
+
+def _bench_replicas(model, params, cfg, replicas: int) -> dict:
+    def build():
+        return ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                             chunk=CHUNK, prefill_mode="chunked",
+                             replan_every=10_000, kv="paged",
+                             kv_block_size=KV_BLOCK)
+    router = ReplicaRouter([build() for _ in range(replicas)])
+    rng = np.random.default_rng(0)
+    n_req = SCALE_REQS_PER_REPLICA * replicas
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, PROMPT_LEN)
+                    .astype(np.int32),
+                    max_new_tokens=MAX_NEW) for i in range(n_req)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        router.submit(r)
+    router.run()
+    dt = time.perf_counter() - t0
+    s = router.stats()
+    toks = sum(len(r.generated) for r in reqs)
+    return {"replicas": replicas, "requests": n_req, "tokens": toks,
+            "wall_s": dt, "overall_tokens_per_s": toks / dt,
+            "aggregate_decode_tokens_per_s":
+                s["aggregate_decode_tokens_per_s"],
+            "dispatched": s["dispatched"]}
+
+
+def run_scaling() -> None:
+    cfg = get_config(ARCH).reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    _bench_replicas(model, params, cfg, 1)    # compile off the clock
+
+    replica_rows = [_bench_replicas(model, params, cfg, r)
+                    for r in SCALE_REPLICAS]
+    shard_rows = [_bench_shards(s) for s in SCALE_SHARDS]
+
+    record = {
+        "generated_by": "benchmarks/serving_throughput.py run_scaling",
+        "host": {"physical_devices": len(jax.devices()),
+                 "note": "forced CPU devices timeshare the host; shard "
+                         "wall-clock is not a speedup claim, the per-"
+                         "device KV byte column is the scaling signal; "
+                         "replica aggregate is the fleet capacity "
+                         "projection (sum of busy-time decode rates)"},
+        "mesh_shards": shard_rows,
+        "replicas": replica_rows,
+    }
+    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+
+    for row in shard_rows:
+        emit(f"serving.scale.shards{row['shards']}", row["wall_s"],
+             f"decode_tokens_per_s={row['decode_tokens_per_s']:.1f};"
+             f"kv_bytes_per_block_per_device="
+             f"{row['kv_bytes_per_block_per_device']}")
+    for row in replica_rows:
+        emit(f"serving.scale.replicas{row['replicas']}", row["wall_s"],
+             f"aggregate_decode_tokens_per_s="
+             f"{row['aggregate_decode_tokens_per_s']:.1f};"
+             f"overall_tokens_per_s={row['overall_tokens_per_s']:.1f};"
+             f"requests={row['requests']}")
+    aggs = [r["aggregate_decode_tokens_per_s"] for r in replica_rows]
+    mono = all(b > a for a, b in zip(aggs, aggs[1:]))
+    emit("serving.scale.takeaways", 0.0,
+         f"replica_aggregate_monotonic={mono};"
+         f"aggregate_1_to_{SCALE_REPLICAS[-1]}="
+         f"{aggs[-1] / aggs[0]:.2f}x;"
+         f"per_device_kv_1_to_{SCALE_SHARDS[-1]}="
+         f"{shard_rows[0]['kv_bytes_per_block_per_device'] / shard_rows[-1]['kv_bytes_per_block_per_device']:.1f}x")
+
+
 def run() -> None:
     cfg = get_config(ARCH).reduced()
     model = Model(cfg)
@@ -312,6 +472,8 @@ def run() -> None:
          f"{tps['ngram_repetitive'] / tps['off_repetitive']:.2f}x;"
          f"spec_ratio_random="
          f"{tps['ngram_random'] / tps['off_random']:.2f}x")
+
+    run_scaling()
 
 
 if __name__ == "__main__":

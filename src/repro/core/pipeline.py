@@ -610,7 +610,7 @@ SERVE_KV_BLOCK_SIZES: tuple[int, ...] = (8, 16, 32)
 
 
 def _plan_kv_pool(slots: int, max_len: int, chunk: int,
-                  avg_prompt: float) -> dict[str, Any]:
+                  avg_prompt: float, shards: int = 1) -> dict[str, Any]:
     """Size the paged KV pool from the prompt-length distribution.
 
     * ``kv_block_size`` — largest candidate dividing ``max_len`` (the
@@ -623,6 +623,11 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
       ``slots * max_len/bs`` (admission can then never be block-gated);
       with stats, requests are modeled at twice their prompt length of
       context, floored so one maximal request always fits.
+    * ``shards`` — concat-TP mesh width: each shard stores ``1/shards``
+      of every block's kv-head bytes, so the fragmentation target scales
+      up by ``shards`` (a ``shards``-times-larger token block has the
+      same per-device bytes the unsharded target aims at, and fewer,
+      shallower block tables amortize the per-dispatch collectives).
     """
     fallback = False
     divisors = [b for b in SERVE_KV_BLOCK_SIZES if max_len % b == 0]
@@ -637,6 +642,7 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
         fallback = True
         divisors = [next(b for b in (4, 2, 1) if max_len % b == 0)]
     target = avg_prompt / 2 if avg_prompt > 0 else float(chunk)
+    target *= max(int(shards), 1)
     fitting = [b for b in divisors if b <= max(target, divisors[0])]
     bs = max(fitting) if fitting else divisors[0]
     per_seq = -(-max_len // bs)
@@ -723,7 +729,13 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
       * ``spec`` — ``"off"`` (default), ``"ngram"`` or ``"draft"``:
         speculative engines additionally get a planned ``spec_k`` draft
         length chosen from ``SERVE_SPEC_KS`` by the observed
-        ``spec_accept_rate`` (see :func:`_plan_spec_k`; -1 = no stats yet).
+        ``spec_accept_rate`` (see :func:`_plan_spec_k`; -1 = no stats yet);
+      * ``mesh_shards``      — concat-TP width of the serving mesh (1 =
+        unsharded): a sharded engine with no stats starts at the widest
+        chunk (per-dispatch collectives amortize over chunk tokens), and
+        the paged-pool geometry scales its block-size target by the shard
+        count (per-shard block bytes stay constant — see
+        :func:`_plan_kv_pool`).
 
     The plan — chunk size from ``SERVE_CHUNK_SIZES``, admission width,
     per-tick preemption bound, ``batched``-vs-``chunked`` prefill mode,
@@ -740,15 +752,24 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     avg_prompt = float(o.get("avg_prompt_len", 0.0))
     can_chunk = bool(o.get("can_chunk", True))
     ratio = float(o.get("chunk_ratio", 4.0))
+    shards = int(o.get("mesh_shards", 1))
 
     if decode_s > 0.0 and prefill_tok_s > 0.0:
         # largest chunk whose modeled cost stays under `ratio` decode steps:
         # long prompts interleave with decode instead of stalling the batch.
+        # Measured sharded timings already carry the per-dispatch collective
+        # cost, so no separate mesh term is needed here.
         budget_tokens = ratio * decode_s / prefill_tok_s
         chunk = SERVE_CHUNK_SIZES[0]
         for c in SERVE_CHUNK_SIZES:
             if c <= budget_tokens:
                 chunk = c
+    elif shards > 1:
+        # no stats on a sharded engine: start at the largest candidate —
+        # every prefill-chunk dispatch pays 2*n_layers all_gathers
+        # regardless of chunk width, so wider chunks amortize the
+        # collective latency until measurements say otherwise
+        chunk = SERVE_CHUNK_SIZES[-1]
     else:
         chunk = 32  # no stats yet: middle of the candidate set
     chunk = min(chunk, max_len)
@@ -797,9 +818,12 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
         "modeled_chunk_cost_steps": round(chunk * prefill_tok_s / decode_s, 2)
                                     if decode_s > 0 else None,
     }
+    if shards > 1:
+        plan["mesh_shards"] = shards
     if kv == "paged":
         plan["kv"] = kv
-        plan.update(_plan_kv_pool(slots, max_len, chunk, avg_prompt))
+        plan.update(_plan_kv_pool(slots, max_len, chunk, avg_prompt,
+                                  shards))
     # the serving engine resolves a KernelPlan once (kernel_select pass)
     # and hands it back through every replan: echoing it into the serve
     # plan keeps the per-site backend choice visible in stats()/reports
@@ -909,6 +933,12 @@ def _modeled_decode_paged(o: dict[str, Any]) -> tuple[str, dict[str, Any]]:
     which the model charges as a latency term on top of the copy
     traffic; the winner depends on pool geometry, and measured timings
     (``tools/kernel_tune.py``) override this model when present.
+
+    Under a concat-TP mesh (``mesh_shards`` > 1) each device holds only
+    ``K / shards`` kv heads of every block, so all per-token KV traffic —
+    the quantity both lowerings are priced on — shrinks by the shard
+    count; the gather's per-block take dispatches do not (every shard
+    issues the same takes on its slice).
     """
     B = int(o.get("slots", 4))
     H = int(o.get("q_heads", 8))
@@ -917,18 +947,21 @@ def _modeled_decode_paged(o: dict[str, Any]) -> tuple[str, dict[str, Any]]:
     W = int(o.get("max_len", 256))
     bs = int(o.get("kv_block_size", 0))
     P = int(o.get("kv_pool_blocks", 0))
+    shards = int(o.get("mesh_shards", 1))
     if bs <= 0 or P <= 0:
         return "gather", {}
     itemsize = 4
-    kv_bytes = K * D * itemsize
-    att_flops = 4 * B * H * D * W              # scores + PV, logical view
+    K_loc = max(1, K // max(shards, 1))
+    H_loc = max(1, H // max(shards, 1))
+    kv_bytes = K_loc * D * itemsize
+    att_flops = 4 * B * H_loc * D * W          # scores + PV, per shard
     # per-block dynamic-index dispatch overhead for one take (seconds):
     # the CPU cost the fold lowering exists to remove.
     take_s = float(o.get("gather_take_s", 2e-7))
     n_blocks = B * (W // bs)
     gather_bytes = 2 * (2 * B * W * kv_bytes)  # K+V: pool read + view write
     fold_flops = (att_flops
-                  + 2 * B * W * P * K * D)     # one-hot K select matmul
+                  + 2 * B * W * P * K_loc * D)  # one-hot K select matmul
     fold_bytes = (P * bs * kv_bytes            # K pool, read in place
                   + 2 * B * W * kv_bytes)      # V: pool read + view write
     gather_s = (cm.roofline(att_flops, gather_bytes, 0).serial_s

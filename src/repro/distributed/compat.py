@@ -36,13 +36,40 @@ AxisType: Any = getattr(jax.sharding, "AxisType", _AxisTypeStub)
 HAS_AXIS_TYPES: bool = hasattr(jax.sharding, "AxisType")
 
 
+def device_count() -> int:
+    """Devices visible to this process.
+
+    On CPU this is 1 unless the process was started with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (jax locks the
+    count at first backend init, so setting the flag after importing jax
+    has no effect — tests spawn a subprocess instead, see
+    ``tests/conftest.run_multidevice``)."""
+    return len(jax.devices())
+
+
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...],
               axis_types: tuple | None = None):
     """``jax.make_mesh`` that tolerates jax without ``axis_types``.
 
     ``axis_types`` defaults to all-Auto (the only type this repo uses); on
     old jax the argument is dropped — legacy meshes are Auto-equivalent.
+
+    Raises ``ValueError`` (not jax's backend-specific error) when the
+    requested mesh is larger than the visible device set, with the
+    forced-host-device escape hatch spelled out — callers like
+    ``launch/serve.py --mesh-shards`` turn this into a nonzero exit
+    instead of silently falling back to fewer devices.
     """
+    import numpy as _np
+
+    need = int(_np.prod(shape))
+    have = device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {need} devices but only "
+            f"{have} are visible; on CPU relaunch the process with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "(the count is locked at first jax backend init)")
     if axis_types is None:
         axis_types = (AxisType.Auto,) * len(axes)
     if HAS_AXIS_TYPES:

@@ -1,0 +1,156 @@
+"""Concat tensor parallelism for the serving hot path (d-Xenos on a mesh).
+
+The paper's d-Xenos extension spreads one inference task over several edge
+devices; DEFER (PAPERS.md) makes the same case for partitioned multi-device
+inference.  This module is that partitioning for the serving engine's
+decode/prefill-chunk hot path, under one hard constraint the rest of the
+repo already enforces everywhere else: **the sharded engine must be
+bit-identical to the single-device engine** (the serving-fuzz harness is
+the oracle).
+
+GSPMD-style tensor parallelism reduces partial products with ``psum``,
+whose reduction order differs from the single-device contraction — the
+repo's own sharded-train test needs ``rtol=2e-4``.  That can never sit
+behind a bitwise oracle.  So serving uses **concat-TP** instead: shard
+only *output* feature axes, never a contraction axis:
+
+  * ``wq`` / ``wk`` / ``wv`` column-split over the (kv-)head axis — each
+    shard projects its own heads (a column slice of a matmul is the same
+    dot products, bit for bit);
+  * attention runs per shard over its local heads against a KV cache
+    sharded the same way (per-head softmax/PV touch no cross-head data);
+  * the head outputs are reassembled by ``all_gather(tiled=True)`` — a
+    pure concatenation, no arithmetic;
+  * the SwiGLU ``gate`` / ``up`` projections column-split over the mlp
+    axis with the same gather before ``down``;
+  * ``wo`` / ``down`` / embed / unembed / norms stay replicated — their
+    contraction dims would otherwise force a reduction.
+
+No cross-shard arithmetic ever happens, so every shard holds bit-exact
+replicas of the activations between blocks and the logits at the end —
+equivalence holds by construction, and only activations (two per-layer
+gathers) cross the mesh.  This mirrors the repo's existing sharding
+philosophy: ``BASELINE_RULES`` maps ``embed -> None`` precisely to avoid
+an all-reduce per matmul; serving takes that to its conclusion.
+
+What this buys at serving scale is KV-cache capacity and attention
+bandwidth: the K/V pools (dense rings and the paged block pool alike)
+shard over the kv-head axis, so each device stores and streams ``1/n`` of
+the KV bytes — the decode hot loop's dominant traffic.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import KVCache, PagedKVCache
+from repro.models.layers import ParamSpec
+
+#: logical parameter axes concat-TP shards (output-feature axes only)
+SERVING_TP_AXES = ("heads", "kv_heads", "mlp")
+
+#: parameter leaf names whose sharded logical axis sits on the contraction
+#: side of their matmul — sharding those would force a psum; they stay
+#: replicated (full-width) on every shard instead.
+_REPLICATED_LEAVES = ("wo", "down")
+
+#: mesh axis name the serving hot path shards over
+SERVING_AXIS = "model"
+
+
+def serving_mesh_shards(mesh) -> int:
+    """Size of the mesh's model axis (1 = effectively unsharded)."""
+    if mesh is None or SERVING_AXIS not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[SERVING_AXIS])
+
+
+def validate_serving_tp(cfg, mesh) -> int:
+    """Check a model config can run concat-TP serving over ``mesh``.
+
+    Returns the shard count.  Raises ``ValueError`` with the full list of
+    violations — a half-compatible config must fail loudly at engine
+    construction, not produce wrong tokens under shard_map."""
+    shards = serving_mesh_shards(mesh)
+    if shards <= 1:
+        return shards
+    problems = []
+    if cfg.family not in ("dense", "vlm"):
+        problems.append(
+            f"family {cfg.family!r} is not supported (concat-TP threads "
+            "through the GQA-attention + SwiGLU decode layer; dense/vlm "
+            "only today)")
+    if cfg.sliding_window:
+        problems.append("sliding-window attention is not supported")
+    if cfg.is_encoder_decoder:
+        problems.append("encoder-decoder cross-attention is not supported")
+    for name, dim in (("n_heads", cfg.n_heads),
+                      ("n_kv_heads", cfg.n_kv_heads),
+                      ("d_ff", cfg.d_ff or cfg.d_model)):
+        if dim % shards:
+            problems.append(
+                f"{name}={dim} is not divisible by {shards} shards "
+                "(concat-TP splits whole heads / mlp columns)")
+    if problems:
+        raise ValueError(
+            f"cannot shard serving for {cfg.name!r} over {shards} devices: "
+            + "; ".join(problems))
+    return shards
+
+
+def serving_param_specs(param_specs, axis: str = SERVING_AXIS):
+    """PartitionSpec tree for the params under concat-TP.
+
+    Walks the ``ParamSpec`` tree (logical axes per dim, the same source
+    ``distributed.sharding`` rules consume) and shards every
+    ``SERVING_TP_AXES`` dim over ``axis`` — except the ``wo`` / ``down``
+    projections, where that logical axis is the *contraction* input and
+    must stay replicated (the no-reduce rule above)."""
+    is_spec = lambda x: isinstance(x, ParamSpec)
+
+    def leaf(path, spec):
+        name = _key_name(path[-1])
+        if name in _REPLICATED_LEAVES:
+            return P(*([None] * len(spec.shape)))
+        return P(*[axis if a in SERVING_TP_AXES else None
+                   for a in spec.axes])
+
+    return jax.tree_util.tree_map_with_path(leaf, param_specs,
+                                            is_leaf=is_spec)
+
+
+def serving_cache_specs(caches, axis: str = SERVING_AXIS):
+    """PartitionSpec tree for the serving caches under concat-TP.
+
+    K/V payloads shard over their kv-head dim — axis 3 for both layouts
+    once the leading layer axis is counted: dense rings are
+    ``(L, B, W, K, D)``, paged pools ``(L, P, bs, K, D)``.  All metadata
+    (positions, lengths, block tables) is replicated: every shard runs the
+    same masks and scatters, only the payload bytes split."""
+    kv = caches.kv
+    payload = P(None, None, None, axis, None)
+    if isinstance(kv, PagedKVCache):
+        kv_spec = PagedKVCache(k=payload, v=payload,
+                               block_tables=P(None, None, None),
+                               length=P(None, None))
+    elif isinstance(kv, KVCache):
+        kv_spec = KVCache(k=payload, v=payload,
+                          positions=P(None, None, None),
+                          length=P(None, None))
+    else:
+        raise ValueError(
+            f"serving caches carry no shardable KV ({type(kv).__name__})")
+
+    def leaf(c):  # non-KV cache state (ssm/cross) is gated off upstream
+        return P(*([None] * c.ndim))
+
+    specs = jax.tree.map(leaf, caches)
+    return specs._replace(kv=kv_spec)
+
+
+def _key_name(key) -> str:
+    """Leaf name from a tree_map_with_path key entry."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(key, attr):
+            return str(getattr(key, attr))
+    return str(key)

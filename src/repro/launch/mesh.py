@@ -12,11 +12,12 @@ skip) on older jax.
 """
 from __future__ import annotations
 
-from repro.distributed.compat import (AxisType, HAS_AXIS_TYPES, make_mesh,
-                                      set_mesh)
+from repro.distributed.compat import (AxisType, HAS_AXIS_TYPES, device_count,
+                                      make_mesh, set_mesh)
 
-__all__ = ["AxisType", "HAS_AXIS_TYPES", "make_mesh", "set_mesh",
-           "make_production_mesh", "make_debug_mesh"]
+__all__ = ["AxisType", "HAS_AXIS_TYPES", "device_count", "make_mesh",
+           "set_mesh", "make_production_mesh", "make_debug_mesh",
+           "make_serving_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -34,6 +35,20 @@ def make_debug_mesh(n_devices: int, *, multi_pod: bool = False):
         d = _split(per_pod)
         return make_mesh((2,) + d, ("pod", "data", "model"))
     return make_mesh(_split(n_devices), ("data", "model"))
+
+
+def make_serving_mesh(shards: int):
+    """1-D tensor-parallel mesh for the sharded serving hot path.
+
+    ``("model",)`` only: serving shards the head/mlp axes of one replica
+    (concat-TP, see ``repro.distributed.tp``); data parallelism at serving
+    scale is the engine-replica router (``repro.serving.router``), not a
+    mesh axis.  Raises ``ValueError`` when ``shards`` exceeds the visible
+    device count — callers must surface that, never shrink the mesh
+    silently."""
+    if shards < 1:
+        raise ValueError(f"serving mesh needs >= 1 shard, got {shards}")
+    return make_mesh((shards,), ("model",))
 
 
 def _split(n: int) -> tuple[int, int]:

@@ -28,9 +28,10 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config
+from repro.launch.mesh import make_serving_mesh
 from repro.models.model import Model
-from repro.serving import (Request, SamplingParams, ServingEngine,
-                           SpecParams, settle_ticks)
+from repro.serving import (ReplicaRouter, Request, SamplingParams,
+                           ServingEngine, SpecParams, settle_ticks)
 
 
 def main(argv=None):
@@ -86,6 +87,16 @@ def main(argv=None):
                     help="comma-separated priorities assigned round-robin "
                          "to requests; higher admits first and may preempt "
                          "lower DECODE slots (e.g. '0,0,0,1')")
+    ap.add_argument("--mesh-shards", type=int, default=1,
+                    help="shard each engine's decode/prefill hot path over "
+                         "this many mesh devices (concat tensor "
+                         "parallelism: per-shard KV pools, bit-identical "
+                         "outputs); exits nonzero if the host has fewer "
+                         "devices — no silent single-device fallback")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="independent engine replicas behind one router "
+                         "(least-loaded + prefix-affinity dispatch); "
+                         "composes with --mesh-shards")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -101,6 +112,17 @@ def main(argv=None):
     prefill_mode = args.prefill_mode
     if args.kv == "paged" and prefill_mode is None:
         prefill_mode = "chunked"  # the only mode a block pool can execute
+    mesh = None
+    if args.mesh_shards > 1:
+        try:
+            mesh = make_serving_mesh(args.mesh_shards)
+        except ValueError as e:
+            # no silent fallback: a sharded deployment that quietly runs
+            # on one device reports throughput that does not exist
+            print(f"FAIL: {e}", file=sys.stderr)
+            return 2
+        if prefill_mode is None:
+            prefill_mode = "chunked"  # the only shard-threaded prefill
     spec_kw = {}
     if args.spec != "off":
         spec_kw["spec"] = SpecParams(mode=args.spec, k=args.spec_k)
@@ -110,13 +132,25 @@ def main(argv=None):
             spec_kw["draft_model"] = draft
             spec_kw["draft_params"] = draft.init(
                 jax.random.key(args.seed + 1))
-    engine = ServingEngine(model, params, slots=args.slots,
-                           max_len=args.max_len, chunk=args.chunk,
-                           eos_id=args.eos_id,
-                           prefill_mode=prefill_mode,
-                           replan_every=args.replan_every,
-                           kv=args.kv, kv_block_size=args.kv_block_size,
-                           kv_pool_blocks=args.kv_pool_blocks, **spec_kw)
+    def build_engine():
+        return ServingEngine(model, params, slots=args.slots,
+                             max_len=args.max_len, chunk=args.chunk,
+                             eos_id=args.eos_id,
+                             prefill_mode=prefill_mode,
+                             replan_every=args.replan_every,
+                             kv=args.kv, kv_block_size=args.kv_block_size,
+                             kv_pool_blocks=args.kv_pool_blocks,
+                             mesh=mesh, **spec_kw)
+
+    router = None
+    if args.replicas > 1:
+        router = ReplicaRouter([build_engine()
+                                for _ in range(args.replicas)])
+        engine = router.engines[0]
+        submit, step, run_all = router.submit, router.step, router.run
+    else:
+        engine = build_engine()
+        submit, step, run_all = engine.submit, engine.step, engine.run
     rng = np.random.default_rng(args.seed)
     reqs = []
     for rid in range(args.requests):
@@ -136,13 +170,13 @@ def main(argv=None):
     t0 = time.time()
     for r in reqs:
         if r.priority == base:
-            engine.submit(r)
+            submit(r)
     if vips:
         for _ in range(settle_ticks(args.prompt_len, args.chunk)):
-            engine.step()
+            step()
         for r in vips:
-            engine.submit(r)
-    engine.run()
+            submit(r)
+    run_all()
     dt = time.time() - t0
     stats = engine.stats()
     # actual emission, not requests * max_new: EOS retires requests early
@@ -151,9 +185,23 @@ def main(argv=None):
                       if args.eos_id >= 0 and r.generated
                       and r.generated[-1] == args.eos_id)
     decode_tps = stats.get("decode_tokens_per_s", 0.0)
+    if router is not None:
+        rstats = router.stats()
+        decode_tps = rstats.get("aggregate_decode_tokens_per_s", 0.0)
     print(f"served {args.requests} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s overall, "
           f"{decode_tps:.1f} tok/s batched decode)")
+    if router is not None:
+        print(f"router: {rstats['replicas']} replicas, "
+              f"{rstats['dispatched']} dispatched, "
+              f"{rstats['affinity_hits']} affinity hits, aggregate decode "
+              f"capacity {decode_tps:.1f} tok/s")
+        for i, per in enumerate(rstats["per_replica"]):
+            print(f"  replica {i}: {per['tokens_out']} tokens out, "
+                  f"{per.get('decode_tokens_per_s', 0.0):.1f} tok/s decode")
+    if "mesh_shards" in stats:
+        print(f"mesh: {stats['mesh_shards']}-way concat-TP "
+              f"({len(jax.devices())} devices visible)")
     print(f"policy: temperature={args.temperature} top_k={args.top_k} "
           f"top_p={args.top_p} eos_id={args.eos_id} "
           f"priorities={priorities}; {eos_stopped} requests stopped at EOS, "
@@ -179,6 +227,11 @@ def main(argv=None):
               f"blocks, {kp['registered_prefixes']} cached prefixes, "
               f"{kp['prefill_tokens_saved']} prefill tokens saved, "
               f"{kp['gated_requests']} requests block-gated")
+        if "per_shard" in kp:
+            ps = kp["per_shard"]
+            print(f"  per shard: {ps['kv_heads']} kv heads, "
+                  f"{ps['block_bytes']} B/block, "
+                  f"{ps['pool_bytes'] / 1e6:.2f} MB pool payload")
     for stage, s in stats["stages"].items():
         print(f"  stage {stage}: {s['calls']} calls, "
               f"mean {s['mean_s'] * 1e3:.2f} ms")

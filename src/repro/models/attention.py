@@ -372,6 +372,22 @@ def _project(p, x, name):
     return jnp.einsum("bsd,dhk->bshk", x, w)
 
 
+def _gather_heads(out: jax.Array, shard_axis: str | None,
+                  axis: int) -> jax.Array:
+    """Reassemble head-sharded attention output under concat-TP serving.
+
+    Each shard attends over its local heads (a contiguous head slice —
+    wq/wk/wv are column-split, so shard ``i`` computes exactly heads
+    ``[i*H_loc, (i+1)*H_loc)`` of the unsharded op, bit for bit); the tiled
+    all_gather concatenates the slices back to full width with no
+    arithmetic.  The ``wo`` projection that follows is replicated, so its
+    contraction sees identical full-width inputs on every shard — this is
+    the no-cross-shard-reduction rule of ``repro.distributed.tp``."""
+    if shard_axis is None:
+        return out
+    return jax.lax.all_gather(out, shard_axis, axis=axis, tiled=True)
+
+
 def attention_block(p: dict[str, jax.Array], x: jax.Array, *,
                     cfg, causal: bool = True, positions: jax.Array | None = None,
                     kv: tuple[jax.Array, jax.Array] | None = None,
@@ -413,10 +429,15 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
                            cross_kv: tuple[jax.Array, jax.Array] | None = None,
                            dense_backend: str = "xla",
                            paged_backend: str = "gather",
-                           live: jax.Array | None = None
+                           live: jax.Array | None = None,
+                           shard_axis: str | None = None
                            ) -> tuple[jax.Array, KVCache]:
     """One decode step.  x: (B, 1, d).  Updates the ring-buffer (or paged)
     cache.
+
+    ``shard_axis`` (concat-TP serving): params arrive head-column-sharded
+    and the cache kv-head-sharded; attention runs over the local heads and
+    :func:`_gather_heads` concatenates before the replicated ``wo``.
 
     RoPE is applied at *write* time (k cached post-rotation, standard decode
     practice): absolute-position rotation of both q and k preserves the
@@ -443,6 +464,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
         k_c, v_c = cross_kv
         valid = jnp.ones(k_c.shape[:2], bool)
         out = decode_attention(q, k_c, v_c, valid, dense_backend)
+        out = _gather_heads(out, shard_axis, axis=1)
         return jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))[:, None], cache
 
     k_new = _project(p, x, "wk")[:, 0]         # (B, K, D)
@@ -458,6 +480,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
     if isinstance(cache, PagedKVCache):
         y, new_cache = _paged_decode_write_attend(
             q, k_new, v_new, cache, live=live, backend=paged_backend)
+        y = _gather_heads(y, shard_axis, axis=1)
         return jnp.einsum("bhk,hkd->bd", y,
                           p["wo"].astype(x.dtype))[:, None], new_cache
 
@@ -472,6 +495,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
     if cfg.sliding_window:
         valid &= positions > (pos[:, None] - cfg.sliding_window)
     out = decode_attention(q, k_cache, v_cache, valid, dense_backend)
+    out = _gather_heads(out, shard_axis, axis=1)
     new_cache = KVCache(k=k_cache, v=v_cache, positions=positions,
                         length=cache.length + 1)
     y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
@@ -583,7 +607,7 @@ def _chunk_qkv(p: dict[str, jax.Array], x: jax.Array, *, cfg,
 
 def _chunk_attend(p: dict[str, jax.Array], q: jax.Array, k_cache: jax.Array,
                   v_cache: jax.Array, attend: jax.Array,
-                  dtype) -> jax.Array:
+                  dtype, shard_axis: str | None = None) -> jax.Array:
     """Shared chunk-prefill back half: chunk queries over the whole
     (just-updated) cache view, masked per row by ``attend`` (B, C, W),
     then the output projection."""
@@ -596,12 +620,15 @@ def _chunk_attend(p: dict[str, jax.Array], q: jax.Array, k_cache: jax.Array,
     s = jnp.where(attend[:, None, None, :, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bkgcw,bwkd->bckgd", w, v_cache).reshape(B, C, H, hd)
+    out = _gather_heads(out, shard_axis, axis=2)
     return jnp.einsum("bchk,hkd->bcd", out, p["wo"].astype(dtype))
 
 
 def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
                              cache: KVCache, *, cfg, offsets: jax.Array,
-                             n_new: jax.Array) -> tuple[jax.Array, KVCache]:
+                             n_new: jax.Array,
+                             shard_axis: str | None = None
+                             ) -> tuple[jax.Array, KVCache]:
     """Chunked prefill: extend the cache by up to C prompt tokens per row.
 
     x: (B, C, d) — the next prompt chunk per row, right-padded.
@@ -640,7 +667,7 @@ def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
         & (positions[:, None, :] <= pos[:, :, None])         # (B, C, W)
     if cfg.sliding_window:
         attend &= positions[:, None, :] > pos[:, :, None] - cfg.sliding_window
-    y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype)
+    y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype, shard_axis)
     new_cache = KVCache(k=k_cache, v=v_cache, positions=positions,
                         length=length)
     return y, new_cache
@@ -648,7 +675,8 @@ def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
 
 def prefill_chunk_into_paged_cache(p: dict[str, jax.Array], x: jax.Array,
                                    cache: PagedKVCache, *, cfg,
-                                   offsets: jax.Array, n_new: jax.Array
+                                   offsets: jax.Array, n_new: jax.Array,
+                                   shard_axis: str | None = None
                                    ) -> tuple[jax.Array, PagedKVCache]:
     """Chunked prefill against a block-paged cache.
 
@@ -689,7 +717,7 @@ def prefill_chunk_into_paged_cache(p: dict[str, jax.Array], x: jax.Array,
     pos_k = jnp.arange(k_cache.shape[1])[None, None, :]      # (1, 1, W)
     attend = (pos_k < length[:, None, None]) \
         & (pos_k <= pos[:, :, None])                         # (B, C, W)
-    y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype)
+    y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype, shard_axis)
     new_cache = PagedKVCache(k=k_pool, v=v_pool,
                              block_tables=cache.block_tables, length=length)
     return y, new_cache

@@ -109,12 +109,21 @@ def swiglu_specs(d: int, ff: int) -> dict[str, ParamSpec]:
     }
 
 
-def swiglu(p: dict[str, jax.Array], x: jax.Array) -> jax.Array:
+def swiglu(p: dict[str, jax.Array], x: jax.Array,
+           shard_axis: str | None = None) -> jax.Array:
     """SwiGLU MLP.  The gate@x and up@x matmuls feed the down matmul without
     the hidden activation leaving the fused region — this is the transformer
     instance of the paper's Matmul->Matmul operator linking (Table 1), and
-    where ``repro.kernels.linked_matmul`` plugs in on TPU."""
+    where ``repro.kernels.linked_matmul`` plugs in on TPU.
+
+    Under concat-TP serving (``repro.distributed.tp``) ``shard_axis`` names
+    the mesh axis the mlp columns are split over: gate/up are column
+    shards, the hidden activation is reassembled by a tiled all_gather
+    (pure concatenation — bit-exact), and ``down`` is replicated
+    full-width so no cross-shard reduction ever happens."""
     h = jax.nn.silu(x @ p["gate"].astype(x.dtype)) * (x @ p["up"].astype(x.dtype))
+    if shard_axis is not None:
+        h = jax.lax.all_gather(h, shard_axis, axis=h.ndim - 1, tiled=True)
     return h @ p["down"].astype(x.dtype)
 
 

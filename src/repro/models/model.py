@@ -293,7 +293,7 @@ class Model:
         return logits, new_caches
 
     def prefill_chunk(self, params, caches, tokens, offsets, n_new,
-                      batch_axes=()):
+                      batch_axes=(), shard_axis=None):
         """Advance a chunked prefill by up to C tokens per row, in place.
 
         tokens: (B, C) right-padded chunk per row; offsets: (B,) tokens each
@@ -321,7 +321,7 @@ class Model:
             hn = rms_norm(h, lp["norm1"])
             att, kv = chunk_fn(
                 lp["attn"], hn, cache.kv, cfg=cfg, offsets=offsets,
-                n_new=n_new)
+                n_new=n_new, shard_axis=shard_axis)
             h = h + att
             h2 = rms_norm(h, lp["norm2"])
             if cfg.family == "moe":
@@ -333,7 +333,7 @@ class Model:
             elif cfg.family == "audio":
                 h = h + T.gelu_mlp(lp["mlp"], h2)
             else:
-                h = h + T.swiglu(lp["mlp"], h2)
+                h = h + T.swiglu(lp["mlp"], h2, shard_axis)
             return h, cache._replace(kv=kv)
 
         x, new_caches = T.scan_or_unroll(body, x, (params["layers"], caches),
@@ -345,7 +345,7 @@ class Model:
         return logits, new_caches
 
     def serve_step(self, params, caches, tokens, batch_axes=(), live=None,
-                   plan=None):
+                   plan=None, shard_axis=None):
         """One decode step.  tokens: (B, 1) -> (logits (B, V), new caches).
 
         ``live`` (B,) bool keeps non-live rows' caches untouched: slots that
@@ -356,6 +356,11 @@ class Model:
 
         ``plan`` (a ``KernelPlan``) overrides ``self.kernel_plan`` for this
         call — the serving engine threads the routed plan through here.
+
+        ``shard_axis`` names the concat-TP mesh axis when the serving
+        engine runs this body under shard_map (``repro.distributed.tp``);
+        embed/unembed and all cache metadata are replicated, so everything
+        outside the per-layer attention/mlp gathers is unchanged.
         """
         cfg = self.cfg
         plan = plan if plan is not None else self.kernel_plan
@@ -365,7 +370,7 @@ class Model:
             params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
             batch_axes=batch_axes, dense_backend=plan.decode_dense,
             paged_backend=plan.decode_paged,
-            live=live if paged else None)
+            live=live if paged else None, shard_axis=shard_axis)
         if live is not None and not paged:
             def keep(new, old):
                 m = live.reshape((1, live.shape[0]) + (1,) * (new.ndim - 2))
@@ -376,7 +381,7 @@ class Model:
         return logits, new_caches
 
     def verify_step(self, params, caches, tokens, n_new, batch_axes=(),
-                    live=None, plan=None):
+                    live=None, plan=None, shard_axis=None):
         """Speculative verify: score ``K1 = k+1`` positions per row in one
         dispatch.  tokens: (B, K1) = per row ``[pending, draft_1..draft_k]``
         right-padded; n_new: (B,) valid positions (0 = bystander row).
@@ -414,7 +419,7 @@ class Model:
                 params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
                 batch_axes=batch_axes, dense_backend=plan.decode_dense,
                 paged_backend=plan.decode_paged,
-                live=step_live if paged else None)
+                live=step_live if paged else None, shard_axis=shard_axis)
             if not paged:
                 def keep(new, old):
                     m = step_live.reshape((1, B) + (1,) * (new.ndim - 2))

@@ -216,14 +216,18 @@ def init_paged_layer_cache(cfg, batch: int, pool_blocks: int,
 
 def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
                          batch_axes=(), dense_backend: str = "xla",
-                         paged_backend: str = "gather", live=None):
+                         paged_backend: str = "gather", live=None,
+                         shard_axis: str | None = None):
     """One-token decode through one layer.  x: (B, 1, d).
 
     ``dense_backend`` / ``paged_backend`` are the attention sites of the
     engine's ``KernelPlan`` (threaded down from ``Model.serve_step``).
     ``live`` is forwarded to the attention block for paged caches (dead
     rows must not scatter into shared pool blocks); dense callers mask
-    post hoc."""
+    post hoc.  ``shard_axis`` is the concat-TP mesh axis when the engine
+    runs this under shard_map (dense/vlm families only — the engine
+    validates; attention and the SwiGLU mlp each gather their sharded
+    output axis before the replicated projection)."""
     fam = cfg.family
     h = rms_norm(x, p["norm1"])
     new = cache
@@ -243,7 +247,7 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
         att, kv = A.attention_decode_block(p["attn"], h, cache.kv, cfg=cfg,
                                            dense_backend=dense_backend,
                                            paged_backend=paged_backend,
-                                           live=live)
+                                           live=live, shard_axis=shard_axis)
         x = x + att
         new = new._replace(kv=kv)
     if cfg.is_encoder_decoder and not isinstance(cache.cross_k, tuple):
@@ -262,13 +266,14 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
     elif fam == "audio":
         x = x + gelu_mlp(p["mlp"], h2)
     elif fam != "ssm":
-        x = x + swiglu(p["mlp"], h2)
+        x = x + swiglu(p["mlp"], h2, shard_axis)
     return x, new
 
 
 def decoder_stack_decode(stacked, x, caches, *, cfg, mesh=None, batch_axes=(),
                          dense_backend: str = "xla",
-                         paged_backend: str = "gather", live=None):
+                         paged_backend: str = "gather", live=None,
+                         shard_axis: str | None = None):
     """caches: LayerCache pytree with a leading layer axis on every leaf."""
 
     def body(carry, inp):
@@ -277,7 +282,7 @@ def decoder_stack_decode(stacked, x, caches, *, cfg, mesh=None, batch_axes=(),
                                             mesh=mesh, batch_axes=batch_axes,
                                             dense_backend=dense_backend,
                                             paged_backend=paged_backend,
-                                            live=live)
+                                            live=live, shard_axis=shard_axis)
         return y, new_cache
 
     x, new_caches = scan_or_unroll(body, x, (stacked, caches),

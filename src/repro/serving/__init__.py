@@ -1,5 +1,6 @@
 from .engine import Request, ServingEngine, settle_ticks
 from .kv_pool import KVBlockPool, PoolConfig, PoolError
+from .router import ReplicaRouter, prefix_key
 from .sampling import (GREEDY, SamplingParams, sample_token_grid,
                        sample_tokens)
 from .scheduler import (RequestState, ScheduledRequest, Scheduler,
@@ -12,4 +13,5 @@ __all__ = ["ServingEngine", "Request", "Scheduler", "SchedulerConfig",
            "serve_plan_graph", "SamplingParams", "GREEDY", "sample_tokens",
            "sample_token_grid", "settle_ticks", "KVBlockPool", "PoolConfig",
            "PoolError", "SpecParams", "SPEC_OFF", "NGramProposer",
-           "DraftModelProposer", "SpecStats", "propose_ngram"]
+           "DraftModelProposer", "SpecStats", "propose_ngram",
+           "ReplicaRouter", "prefix_key"]

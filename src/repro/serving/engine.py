@@ -89,12 +89,20 @@ def settle_ticks(prompt_len: int, chunk: int) -> int:
     return 2 * max(1, -(-prompt_len // max(chunk, 1))) + 1
 
 
-def _serving_jits(model, max_len: int, plan: KernelPlan) -> dict:
+def _serving_jits(model, max_len: int, plan: KernelPlan, mesh=None,
+                  caches=None) -> dict:
     """Jitted serving steps, cached **on the model**: every engine over the
     same model shares one compiled prefill/chunk/decode/reset/sample, so
     spinning up an engine (benchmarks do it per policy) never recompiles.
     Keyed on ``(max_len, plan)`` — a :class:`KernelPlan` is frozen and
-    hashable, and every dispatch below routes through it.
+    hashable, and every dispatch below routes through it.  With a >1-shard
+    ``mesh`` the hot-path entries (serve / chunk / serve_sample / verify)
+    are shard_map-wrapped under the concat-TP partition specs
+    (``repro.distributed.tp``) — ``caches`` supplies the layout the specs
+    are built from, and the cache key gains ``(mesh, layout)`` so dense
+    and paged sharded engines never share a wrapper.  The metadata-only
+    entries (reset / rollback) stay plain jit: they touch no K/V payload
+    math and GSPMD propagates the input shardings through them.
 
     The plan's ``sampler`` site picks the sampling lowering:
 
@@ -106,13 +114,36 @@ def _serving_jits(model, max_len: int, plan: KernelPlan) -> dict:
         dispatch — the per-tick dispatch overhead, not the sort FLOPs, is
         what dominates sampling cost at serving vocab sizes.
     """
+    from repro.distributed import tp as _tp
+
     cache = getattr(model, "_serving_jit_cache", None)
     if cache is None:
         cache = {}
         model._serving_jit_cache = cache
-    key = (max_len, plan)
+    shards = _tp.serving_mesh_shards(mesh)
+    key = (max_len, plan) if shards <= 1 else \
+        (max_len, plan, mesh, type(caches.kv).__name__)
     if key not in cache:
         vocab = model.cfg.vocab
+        ax = _tp.SERVING_AXIS if shards > 1 else None
+        if shards > 1:
+            from repro.distributed.compat import shard_map as _shard_map
+            from jax.sharding import PartitionSpec as _P
+            pspecs = _tp.serving_param_specs(model.param_specs())
+            cspecs = _tp.serving_cache_specs(caches)
+
+            def wrap(f, n_rep_args):
+                # every non-param/cache operand (tokens, masks, sampling
+                # policy arrays) and every logits/token output is
+                # replicated; check_vma off — unchecked-replication out
+                # specs are exactly what concat-TP produces (each shard
+                # computes the identical full-width result)
+                return jax.jit(_shard_map(
+                    f, mesh=mesh,
+                    in_specs=(pspecs, cspecs) + (_P(),) * n_rep_args,
+                    out_specs=(_P(), cspecs), check_vma=False))
+        else:
+            wrap = lambda f, n_rep_args: jax.jit(f)
         if plan.sampler == "reference":
             sample = jax.jit(functools.partial(sample_tokens, vocab=vocab))
             sample_grid = jax.jit(
@@ -125,31 +156,34 @@ def _serving_jits(model, max_len: int, plan: KernelPlan) -> dict:
             sample_grid = functools.partial(fused_sample_grid, vocab=vocab,
                                             backend=backend)
 
-            @jax.jit
-            def serve_sample(p, c, t, live, seeds, steps, temps, ks, ps):
+            def serve_sample_body(p, c, t, live, seeds, steps, temps, ks,
+                                  ps):
                 logits, new_c = model.serve_step(p, c, t, live=live,
-                                                 plan=plan)
+                                                 plan=plan, shard_axis=ax)
                 toks = fused_sample(logits, seeds, steps, temps, ks, ps,
                                     vocab=vocab, backend=backend)
                 return toks, new_c
 
+            serve_sample = wrap(serve_sample_body, 7)
+
         cache[key] = {
-            "serve": jax.jit(
-                lambda p, c, t, live: model.serve_step(p, c, t, live=live,
-                                                       plan=plan)),
+            "serve": wrap(
+                lambda p, c, t, live: model.serve_step(
+                    p, c, t, live=live, plan=plan, shard_axis=ax), 2),
             "prefill": jax.jit(
                 lambda p, b: model.prefill_step(p, b, max_len=max_len)),
-            "chunk": jax.jit(
-                lambda p, c, t, off, nn: model.prefill_chunk(p, c, t, off, nn)),
+            "chunk": wrap(
+                lambda p, c, t, off, nn: model.prefill_chunk(
+                    p, c, t, off, nn, shard_axis=ax), 3),
             "reset": jax.jit(
                 lambda c, rows: model.reset_cache_rows(c, rows)),
             "sample": sample,
             "serve_sample": serve_sample,
             # speculative decoding (jax.jit re-traces per distinct verify
             # width K1, bounded by the closed spec-k candidate set)
-            "verify": jax.jit(
-                lambda p, c, t, nn: model.verify_step(p, c, t, nn,
-                                                      plan=plan)),
+            "verify": wrap(
+                lambda p, c, t, nn: model.verify_step(
+                    p, c, t, nn, plan=plan, shard_axis=ax), 2),
             "rollback": jax.jit(
                 lambda c, keep, rows: model.rollback_cache_rows(
                     c, keep, rows)),
@@ -169,11 +203,16 @@ class ServingEngine:
                  spec: SpecParams | None = None, spec_k_max: int = 16,
                  draft_model=None, draft_params=None,
                  kernel_plan: KernelPlan | str | None = None,
-                 kernel_timings: dict | None = None):
+                 kernel_timings: dict | None = None, mesh=None):
         if kv not in ("dense", "paged"):
             raise ValueError(f"unknown kv mode {kv!r}; have dense|paged")
+        from repro.distributed import tp as _tp
         self.model = model
         self.params = params
+        #: concat-TP serving mesh (repro.distributed.tp); validated here so
+        #: an incompatible config fails at construction, not mid-serve
+        self.mesh = mesh
+        self.mesh_shards = _tp.validate_serving_tp(model.cfg, mesh)
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
@@ -212,6 +251,13 @@ class ServingEngine:
         auto_mode = prefill_mode is None
         if auto_mode:
             prefill_mode = "chunked" if cfg.attention_only else "batched"
+        if self.mesh_shards > 1 and prefill_mode != "chunked":
+            # the one-shot prefill_step path is not shard-threaded (it
+            # splices whole cache rows host-side); every sharded dispatch
+            # goes through the chunked entries
+            raise ValueError(
+                f"a mesh-sharded engine requires prefill_mode='chunked', "
+                f"not {prefill_mode!r}")
         if kv == "paged":
             # paged KV rides on chunked prefill (a block pool has no
             # one-shot row-splice path) and needs pageable attention state
@@ -241,8 +287,12 @@ class ServingEngine:
         self.scheduler.spec_mode = self.default_spec.mode
         # a pinned mode stays pinned; auto engines let serve_schedule
         # switch batched<->chunked from observed stats (never paged ones:
-        # the pool cannot execute a one-shot batched prefill)
-        self.scheduler.adopt_prefill_mode = auto_mode and kv != "paged"
+        # the pool cannot execute a one-shot batched prefill; nor sharded
+        # ones: the one-shot path is not shard-threaded)
+        self.scheduler.adopt_prefill_mode = (auto_mode and kv != "paged"
+                                             and self.mesh_shards == 1)
+        # replans price the per-dispatch collective cost of a sharded plan
+        self.scheduler.mesh_shards = self.mesh_shards
 
         if kv == "paged":
             self._init_paged_kv(kv_block_size, kv_pool_blocks)
@@ -253,7 +303,25 @@ class ServingEngine:
                                                      kernel_timings)
         self.scheduler.kernel_plan = self.kernel_plan.as_dict()
         self._last_tokens = jnp.zeros((slots, 1), jnp.int32)
-        jits = _serving_jits(model, max_len, self.kernel_plan)
+        if self.mesh_shards > 1:
+            # place params/caches under their concat-TP shardings once —
+            # otherwise every dispatch would re-shard the replicated
+            # arrays; subsequent cache updates come back from the
+            # shard_mapped entries already laid out
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as _P
+
+            def place(tree, specs):
+                return jax.tree.map(
+                    lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                    tree, specs, is_leaf=lambda x: isinstance(x, _P))
+
+            self.params = place(self.params,
+                                _tp.serving_param_specs(model.param_specs()))
+            self.caches = place(self.caches,
+                                _tp.serving_cache_specs(self.caches))
+        jits = _serving_jits(model, max_len, self.kernel_plan, mesh=mesh,
+                             caches=self.caches)
         self._serve = jits["serve"]
         self._prefill = jits["prefill"]
         self._chunk_step = jits["chunk"]
@@ -290,6 +358,8 @@ class ServingEngine:
             "q_heads": cfg.n_heads, "kv_heads": cfg.n_kv_heads,
             "head_dim": cfg.resolved_head_dim,
         }
+        if self.mesh_shards > 1:
+            options["mesh_shards"] = self.mesh_shards
         if self.pool is not None:
             options["kv_block_size"] = self.pool.cfg.block_size
             options["kv_pool_blocks"] = self.pool.cfg.pool_blocks
@@ -324,12 +394,14 @@ class ServingEngine:
         distribution."""
         if block_size is None or pool_blocks is None:
             from repro.core import pipeline
+            options = {"slots": self.slots, "max_len": self.max_len,
+                       "kv": "paged", "can_chunk": True,
+                       "replan_every": self.scheduler.cfg.replan_every}
+            if self.mesh_shards > 1:
+                options["mesh_shards"] = self.mesh_shards
             _, report = pipeline.optimize(
                 self.scheduler.plan_graph,
-                passes=("serve_schedule",),
-                options={"slots": self.slots, "max_len": self.max_len,
-                         "kv": "paged", "can_chunk": True,
-                         "replan_every": self.scheduler.cfg.replan_every})
+                passes=("serve_schedule",), options=options)
             plan = report.passes[-1].summary
             if block_size is None:
                 # clamp the planned block to the configured prefill chunk:
@@ -357,7 +429,7 @@ class ServingEngine:
         max_blocks = self.max_len // block_size
         self.pool = KVBlockPool(PoolConfig(
             block_size=block_size, pool_blocks=pool_blocks,
-            max_blocks_per_seq=max_blocks))
+            max_blocks_per_seq=max_blocks, shards=self.mesh_shards))
         self.caches = self.model.init_paged_caches(
             self.slots, pool_blocks=pool_blocks, block_size=block_size,
             max_blocks=max_blocks)
@@ -843,9 +915,26 @@ class ServingEngine:
                "kernel_plan": self.kernel_plan.as_dict()}
         if self._kernel_report is not None:
             out["kernel_report"] = self._kernel_report.as_dict()
+        if self.mesh_shards > 1:
+            out["mesh_shards"] = self.mesh_shards
         if self.pool is not None:
             out["kv_pool"] = self.pool.stats()
             out["prefill_tokens_saved"] = self.pool.tokens_saved
+            if self.mesh_shards > 1:
+                # per-device geometry: block allocation is replicated (one
+                # host-side pool decides for every shard) but each shard
+                # stores only its kv-head slice of every block
+                cfg = self.model.cfg
+                k_loc = cfg.n_kv_heads // self.mesh_shards
+                itemsize = jnp.dtype(self.caches.kv.k.dtype).itemsize
+                blk = self.pool.cfg.block_size
+                out["kv_pool"]["per_shard"] = {
+                    "kv_heads": k_loc,
+                    "block_bytes": 2 * blk * k_loc
+                    * cfg.resolved_head_dim * itemsize,
+                    "pool_bytes": 2 * self.pool.cfg.pool_blocks * blk
+                    * k_loc * cfg.resolved_head_dim * itemsize,
+                }
         rep = self.scheduler.last_report
         if rep is not None:
             out["plan_report"] = rep.as_dict()

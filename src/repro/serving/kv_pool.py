@@ -70,10 +70,19 @@ class PoolConfig:
     block_size: int = 16       # tokens per physical block
     pool_blocks: int = 64      # physical blocks in the pool
     max_blocks_per_seq: int = 8  # block-table width (= max_len / block_size)
+    #: concat-TP shard count of the serving mesh the pool arrays live on.
+    #: Allocation stays a single host-side decision (block ids and tables
+    #: are replicated on every shard); each shard's device arrays hold only
+    #: its kv-head slice of every block, so per-shard block bytes are the
+    #: dense block's / shards.  Recorded here so stats() and the planner
+    #: can report/price per-device capacity.
+    shards: int = 1
 
     def __post_init__(self):
         if self.block_size <= 0 or self.pool_blocks <= 0:
             raise ValueError(f"bad pool config {self}")
+        if self.shards < 1:
+            raise ValueError(f"bad shard count in pool config {self}")
         if self.max_blocks_per_seq > self.pool_blocks:
             raise ValueError(
                 f"max_blocks_per_seq {self.max_blocks_per_seq} exceeds the "
@@ -339,6 +348,7 @@ class KVBlockPool:
         return {
             "pool_blocks": self.cfg.pool_blocks,
             "block_size": self.cfg.block_size,
+            "shards": self.cfg.shards,
             "blocks_in_use": in_use,
             "blocks_free": len(self.free_list),
             "blocks_cached": len(self.cached),

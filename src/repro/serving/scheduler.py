@@ -159,6 +159,10 @@ class Scheduler:
         #: — forwarded to the serve_schedule pass so replans plan ``spec_k``
         #: from the observed acceptance rate.
         self.spec_mode = "off"
+        #: concat-TP shard count of the engine's serving mesh (1 =
+        #: unsharded) — forwarded to the serve_schedule pass so replanned
+        #: chunk/pool geometry prices the per-dispatch collective cost.
+        self.mesh_shards = 1
         #: the engine's resolved KernelPlan (as a site->backend dict) —
         #: forwarded to the serve_schedule pass so every replanned plan
         #: carries the routing it was planned under; the dict is fixed at
@@ -406,6 +410,8 @@ class Scheduler:
         }
         if self.kv_mode != "dense":
             options["kv"] = self.kv_mode
+        if self.mesh_shards > 1:
+            options["mesh_shards"] = self.mesh_shards
         if self.kernel_plan:
             options["kernel_plan"] = dict(sorted(self.kernel_plan.items()))
         if self.spec_mode != "off":

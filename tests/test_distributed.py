@@ -143,3 +143,29 @@ for name, cfg in all_configs().items():
 print("RULES_OK")
 """)
     assert "RULES_OK" in out
+
+
+# -- mesh construction guards (run in the normal 1-device process) ------------
+
+def test_make_mesh_oversubscription_raises_with_hint():
+    """Asking for more devices than the host has must fail loudly — with
+    the XLA_FLAGS relaunch hint — never fall back to fewer devices."""
+    from repro.distributed.compat import device_count, make_mesh
+    have = device_count()
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_mesh((have + 1,), ("x",))
+
+
+def test_make_serving_mesh_guards():
+    """The serving mesh helper inherits the same no-silent-fallback rule
+    and rejects nonsensical shard counts."""
+    from repro.launch.mesh import make_serving_mesh
+    with pytest.raises(ValueError):
+        make_serving_mesh(0)
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_serving_mesh(len(jax.devices()) + 1)
+
+
+def test_device_count_matches_jax():
+    from repro.distributed.compat import device_count
+    assert device_count() == len(jax.devices())

@@ -34,6 +34,7 @@ The paged engine's pool accounting (`KVBlockPool.check_invariants`) is
 re-derived after every tick of every trace.
 """
 import dataclasses
+import json
 import os
 
 import numpy as np
@@ -154,7 +155,7 @@ def make_trace(seed: int, sampled: bool) -> Trace:
 
 def run_trace(model, params, trace: Trace, kv: str,
               spec: SpecParams | None = None,
-              draft=None, kernel_plan=None) -> list[list[int]]:
+              draft=None, kernel_plan=None, mesh=None) -> list[list[int]]:
     spec_kw = {}
     if spec is not None:
         spec_kw = dict(spec=spec, spec_k_max=SPEC_K_MAX)
@@ -166,7 +167,7 @@ def run_trace(model, params, trace: Trace, kv: str,
                         kv_block_size=BLOCK if kv == "paged" else None,
                         kv_pool_blocks=trace.pool_blocks
                         if kv == "paged" else None,
-                        kernel_plan=kernel_plan, **spec_kw)
+                        kernel_plan=kernel_plan, mesh=mesh, **spec_kw)
     reqs = []
     for rid, ev in enumerate(trace.events):
         for _ in range(ev.gap):
@@ -574,3 +575,74 @@ def test_mixed_per_request_spec_matches_baseline(fuzz_model):
         assert stats.drafts_accepted > 0
         # and the aggressive lookup on random text got drafts rejected
         assert stats.drafts_accepted < stats.drafts_proposed
+
+
+# -- the mesh-sharded tier ----------------------------------------------------
+#
+# The concat-TP serving path (``repro.distributed.tp``) promises
+# *bit-identical* outputs on a multi-device mesh: every cross-shard edge is
+# a pure ``all_gather`` concatenation, never an arithmetic reduction, so
+# the sharded engine is the single-device engine computed in a different
+# partition order of the same ops.  A subprocess with a forced 2-device
+# host platform replays fuzz traces through a 2-shard engine and asserts
+# equality against the in-process single-device streams — both KV layouts,
+# greedy and seeded sampled, speculation on and off.
+
+def test_sharded_engine_matches_single_device(fuzz_model):
+    """2-shard concat-TP engine emits streams bit-identical to the
+    single-device engine: dense + paged KV, greedy + sampled traces,
+    with and without n-gram speculation."""
+    from conftest import run_multidevice
+    model, params = fuzz_model
+    # single-device reference streams computed here, in the normal
+    # 1-device test process — the subprocess must reproduce them exactly
+    expect = {}
+    for seed, sampled in ((0, False), (10_000, True)):
+        trace = make_trace(seed, sampled=sampled)
+        for kv in ("dense", "paged"):
+            expect[f"{seed}/{kv}"] = run_trace(model, params, trace, kv)
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    out = run_multidevice(f"""
+import json, sys
+sys.path.insert(0, {tests_dir!r})
+import jax
+assert len(jax.devices()) == 2, jax.devices()
+import test_serving_fuzz as F
+from repro.models.model import Model
+from repro.launch.mesh import make_serving_mesh
+from repro.serving import SpecParams
+
+model = Model(F.CFG)
+params = model.init(jax.random.key(0))
+mesh = make_serving_mesh(2)
+expect = json.loads({json.dumps(expect)!r})
+spec = SpecParams(mode="ngram", k=3, min_ngram=1)
+for seed, sampled in ((0, False), (10_000, True)):
+    trace = F.make_trace(seed, sampled=sampled)
+    for kv in ("dense", "paged"):
+        ref = expect[f"{{seed}}/{{kv}}"]
+        sharded = F.run_trace(model, params, trace, kv, mesh=mesh)
+        assert sharded == ref, (seed, kv, "plain", ref, sharded)
+        sh_spec = F.run_trace(model, params, trace, kv, spec=spec,
+                              mesh=mesh)
+        assert sh_spec == ref, (seed, kv, "spec", ref, sh_spec)
+print("SHARDED_EQUIV_OK")
+""", n_devices=2)
+    assert "SHARDED_EQUIV_OK" in out
+
+
+def test_sharded_engine_requires_divisible_heads(fuzz_model):
+    """A config whose kv heads don't divide the mesh must be rejected at
+    engine construction with an actionable error, not mis-sharded."""
+    from repro.distributed.tp import validate_serving_tp
+    with pytest.raises(ValueError, match="n_kv_heads"):
+        validate_serving_tp(
+            dataclasses.replace(CFG, n_kv_heads=3, n_heads=6),
+            _FakeMesh(2))
+
+
+class _FakeMesh:
+    """Just enough mesh surface for validate_serving_tp (axis sizes)."""
+    def __init__(self, shards):
+        self.shape = {"model": shards}
+        self.axis_names = ("model",)
