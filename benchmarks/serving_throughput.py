@@ -70,6 +70,7 @@ tokens/s number on a shared box.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import subprocess
@@ -407,7 +408,7 @@ def run_scaling() -> None:
         "mesh_shards": shard_rows,
         "replicas": replica_rows,
     }
-    BENCH_JSON.write_text(json.dumps(record, indent=2) + "\n")
+    _merge_bench_json(record)
 
     for row in shard_rows:
         emit(f"serving.scale.shards{row['shards']}", row["wall_s"],
@@ -428,6 +429,147 @@ def run_scaling() -> None:
          f"{aggs[-1] / aggs[0]:.2f}x;"
          f"per_device_kv_1_to_{SCALE_SHARDS[-1]}="
          f"{shard_rows[0]['kv_bytes_per_block_per_device'] / shard_rows[-1]['kv_bytes_per_block_per_device']:.1f}x")
+
+
+def _merge_bench_json(record: dict) -> None:
+    """Update ``BENCH_serving.json`` in place: ``run_scaling`` and
+    ``run_families`` each own their keys, neither clobbers the other."""
+    existing = {}
+    if BENCH_JSON.exists():
+        try:
+            existing = json.loads(BENCH_JSON.read_text())
+        except json.JSONDecodeError:
+            existing = {}
+    existing.update(record)
+    BENCH_JSON.write_text(json.dumps(existing, indent=2) + "\n")
+
+
+# -- cache-family rows: the long-chat KV-footprint column ---------------------
+#
+# The long-chat workload: prompts past the sliding window, so by the time
+# a request decodes its ring has already wrapped.  One row per dataflow
+# shape — ``full`` (classic paged pool, KV grows to the horizon),
+# ``sliding`` (ring-paged, the same arch with a window: the lease is
+# window-sized *forever*), ``ssm`` and ``hybrid`` (constant recurrent
+# state) — reporting tokens/s and the KV bytes a live request actually
+# holds mid-decode.  The sliding-vs-full byte ratio is the O(window) vs
+# O(seq) claim, measured from the pool's own accounting rather than
+# asserted; the ssm row's bytes don't change with context length at all
+# (``kv_growth="constant"`` in the serve_schedule plan).
+
+FAMILY_WINDOW = 32           # tokens; 4 ring blocks of KV_BLOCK=8
+FAMILY_PROMPT = 48           # > window: the ring wraps during prefill
+FAMILY_MAX_NEW = 8
+FAMILY_MAX_LEN = 128
+FAMILY_SLOTS = 2
+FAMILY_REQUESTS = 4
+
+FAMILY_ROWS = ("full", "sliding", "ssm", "hybrid")
+
+
+def _family_setup(row: str):
+    if row in ("full", "sliding"):
+        cfg = get_config(ARCH).reduced()
+        if row == "sliding":
+            cfg = dataclasses.replace(cfg, name=cfg.name + "-swa",
+                                      sliding_window=FAMILY_WINDOW)
+        kw = dict(kv="paged", kv_block_size=KV_BLOCK)
+    elif row == "ssm":
+        cfg = get_config("mamba2-370m").reduced()
+        kw = dict(kv="dense")
+    else:
+        cfg = get_config("hymba-1.5b").reduced()
+        kw = dict(kv="dense")
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.key(0)), kw
+
+
+def _state_bytes(cfg) -> int:
+    """Constant recurrent footprint per request: SSD state + conv tail."""
+    conv_dim = cfg.ssm_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    per_layer = (cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state
+                 + (cfg.ssm_conv - 1) * conv_dim)
+    return per_layer * 4 * cfg.n_layers
+
+
+def _family_serve(cfg, model, params, kw) -> tuple[float, dict, int]:
+    eng = ServingEngine(model, params, slots=FAMILY_SLOTS,
+                        max_len=FAMILY_MAX_LEN, chunk=CHUNK,
+                        prefill_mode="chunked", replan_every=10_000, **kw)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, FAMILY_PROMPT)
+                    .astype(np.int32),
+                    max_new_tokens=FAMILY_MAX_NEW)
+            for i in range(FAMILY_REQUESTS)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    # drive the first admission wave into decode, then snapshot the KV a
+    # live request holds — past the window for the sliding row, so the
+    # ring has wrapped and the lease is still window-sized
+    kv_bytes = 0
+    for _ in range(3000):
+        eng.step()
+        decoding = [r for r in reqs if len(r.generated) >= 2 and not r.done]
+        if decoding:
+            if eng.pool is not None:
+                ps = eng.pool.stats()
+                live = max(ps["live_requests"], 1)
+                per_block = (2 * eng.pool.cfg.block_size * cfg.n_kv_heads
+                             * cfg.resolved_head_dim * 4 * cfg.n_layers)
+                kv_bytes = ps["blocks_in_use"] * per_block // live
+            else:
+                kv_bytes = _state_bytes(cfg)
+                if cfg.family == "hybrid":
+                    # dense per-slot attention rows: the whole horizon
+                    kv_bytes += (2 * FAMILY_MAX_LEN * cfg.n_kv_heads
+                                 * cfg.resolved_head_dim * 4 * cfg.n_layers)
+            break
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in reqs)
+    assert all(r.done for r in reqs) and toks > 0
+    return dt, eng.stats(), kv_bytes
+
+
+def run_families() -> None:
+    rows = []
+    for row in FAMILY_ROWS:
+        cfg, model, params, kw = _family_setup(row)
+        _family_serve(cfg, model, params, kw)      # compile off the clock
+        dt, stats, kv_bytes = _family_serve(cfg, model, params, kw)
+        toks = FAMILY_REQUESTS * FAMILY_MAX_NEW
+        rec = {"row": row, "arch": cfg.name, "family": cfg.family,
+               "sliding_window": cfg.sliding_window, "kv": kw["kv"],
+               "prompt_len": FAMILY_PROMPT, "max_new": FAMILY_MAX_NEW,
+               "wall_s": dt, "tokens_per_s": toks / dt,
+               "decode_tokens_per_s":
+                   stats.get("decode_tokens_per_s", 0.0),
+               "kv_bytes_held_per_request": int(kv_bytes),
+               "kv_growth": stats["plan"].get("kv_growth", "linear")}
+        rows.append(rec)
+        emit(f"serving.family.{row}", dt / toks,
+             f"tokens_per_s={rec['tokens_per_s']:.1f};"
+             f"decode_tokens_per_s={rec['decode_tokens_per_s']:.1f};"
+             f"kv_bytes_held_per_request={rec['kv_bytes_held_per_request']};"
+             f"kv_growth={rec['kv_growth']}")
+    by = {r["row"]: r for r in rows}
+    ratio = (by["full"]["kv_bytes_held_per_request"]
+             / max(by["sliding"]["kv_bytes_held_per_request"], 1))
+    emit("serving.family.takeaways", 0.0,
+         f"sliding_kv_saving_vs_full={ratio:.2f}x;"
+         f"window={FAMILY_WINDOW};prompt={FAMILY_PROMPT};"
+         f"ssm_kv_growth={by['ssm']['kv_growth']};"
+         f"hybrid_kv_growth={by['hybrid']['kv_growth']}")
+    _merge_bench_json({"families": {
+        "workload": {"prompt_len": FAMILY_PROMPT, "max_new": FAMILY_MAX_NEW,
+                     "window": FAMILY_WINDOW, "max_len": FAMILY_MAX_LEN,
+                     "note": "kv_bytes_held_per_request is snapshotted "
+                             "mid-decode from the pool's own accounting "
+                             "(ring leases stay window-sized after the "
+                             "ring wraps) or the constant-state shapes"},
+        "rows": rows}})
 
 
 def run() -> None:
@@ -473,6 +615,7 @@ def run() -> None:
          f"spec_ratio_random="
          f"{tps['ngram_random'] / tps['off_random']:.2f}x")
 
+    run_families()
     run_scaling()
 
 

@@ -28,6 +28,8 @@ class ModelConfig:
     rope_fraction: float = 1.0     # chatglm3 "RoPE 2d": rotary on half the dims
     rope_theta: float = 10000.0
     sliding_window: int = 0        # 0 = full attention; >0 enables long_500k
+    max_len: int = 0               # serving-horizon hint (0 = unbounded);
+                                   # reduced() clamps sliding_window to it
     logit_softcap: float = 0.0
 
     # MoE
@@ -140,6 +142,12 @@ class ModelConfig:
         d = min(self.d_model, 256)
         n_heads = min(self.n_heads, 4) if self.n_heads else 0
         n_kv = min(self.n_kv_heads, max(1, n_heads // 2)) if self.n_kv_heads else 0
+        # the reduced horizon bounds the reduced window: a smoke config
+        # claiming a window wider than its own max_len would mask every
+        # sliding-window code path (the ring would never wrap)
+        max_len = min(self.max_len, 128) if self.max_len else 128
+        window = min(self.sliding_window, 64, max_len) \
+            if self.sliding_window else 0
         return dataclasses.replace(
             self,
             name=self.name + "-smoke",
@@ -156,7 +164,8 @@ class ModelConfig:
             ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
             ssm_head_dim=32 if self.ssm_state else 64,
             ssm_chunk=16,
-            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            sliding_window=window,
+            max_len=max_len,
             dtype="float32",
             param_dtype="float32",
             opt_dtype="float32",

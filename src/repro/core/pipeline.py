@@ -610,17 +610,18 @@ SERVE_KV_BLOCK_SIZES: tuple[int, ...] = (8, 16, 32)
 
 
 def _plan_kv_pool(slots: int, max_len: int, chunk: int,
-                  avg_prompt: float, shards: int = 1) -> dict[str, Any]:
+                  avg_prompt: float, shards: int = 1,
+                  window: int = 0) -> dict[str, Any]:
     """Size the paged KV pool from the prompt-length distribution.
 
-    * ``kv_block_size`` — largest candidate dividing ``max_len`` (the
-      block table must tile the horizon exactly — that equality is also
-      what keeps the paged gather's axis layout identical to the dense
-      ring buffer) that does not exceed half the average prompt: smaller
+    * ``kv_block_size`` — largest candidate dividing the horizon (the
+      block table must tile it exactly — that equality is also what
+      keeps the paged gather's axis layout identical to the dense ring
+      buffer) that does not exceed half the average prompt: smaller
       blocks waste less to fragmentation and share shorter prefixes, a
       larger one keeps tables and gathers shallow.
     * ``kv_pool_blocks`` — without stats, the dense-equivalent capacity
-      ``slots * max_len/bs`` (admission can then never be block-gated);
+      ``slots * horizon/bs`` (admission can then never be block-gated);
       with stats, requests are modeled at twice their prompt length of
       context, floored so one maximal request always fits.
     * ``shards`` — concat-TP mesh width: each shard stores ``1/shards``
@@ -628,9 +629,15 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
       up by ``shards`` (a ``shards``-times-larger token block has the
       same per-device bytes the unsharded target aims at, and fewer,
       shallower block tables amortize the per-dispatch collectives).
+    * ``window`` — sliding-window width (0 = full attention).  A ring
+      pool's horizon is the *window*, not ``max_len``: every request
+      holds a fixed window-sized lease whose blocks are rewritten in
+      place as the window slides, so admission prices O(window) blocks
+      however long the chat runs.
     """
+    horizon = min(window, max_len) if window else max_len
     fallback = False
-    divisors = [b for b in SERVE_KV_BLOCK_SIZES if max_len % b == 0]
+    divisors = [b for b in SERVE_KV_BLOCK_SIZES if horizon % b == 0]
     if not divisors:
         # no preferred size tiles this horizon: fall back to the largest
         # power-of-two divisor (>=1 always exists), so planned defaults
@@ -640,24 +647,32 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
         # surfaced in the plan and the PassReport instead of silently
         # shipping a degraded geometry
         fallback = True
-        divisors = [next(b for b in (4, 2, 1) if max_len % b == 0)]
+        divisors = [next(b for b in (4, 2, 1) if horizon % b == 0)]
     target = avg_prompt / 2 if avg_prompt > 0 else float(chunk)
     target *= max(int(shards), 1)
     fitting = [b for b in divisors if b <= max(target, divisors[0])]
     bs = max(fitting) if fitting else divisors[0]
-    per_seq = -(-max_len // bs)
-    if avg_prompt > 0:
-        modeled = -(-int(min(max_len, 2 * avg_prompt)) // bs)
+    per_seq = -(-horizon // bs)
+    if window:
+        # ring leases are fixed at window size: prompt stats can never
+        # shrink them (the window is full whenever context >= window)
+        pool_blocks = slots * per_seq
+    elif avg_prompt > 0:
+        modeled = -(-int(min(horizon, 2 * avg_prompt)) // bs)
         pool_blocks = max(per_seq, slots * modeled)
     else:
         pool_blocks = slots * per_seq
     out = {
         "kv_block_size": bs,
         "kv_pool_blocks": pool_blocks,
-        # fraction of the dense caches' KV slots the pool does not allocate
+        # fraction of a full-horizon dense cache's KV slots the pool does
+        # not allocate — for a ring pool this is the O(window)-vs-O(seq)
+        # saving the sliding family exists for
         "kv_saving": round(max(0.0, 1.0 - pool_blocks * bs
                                 / (slots * max_len)), 4),
     }
+    if window:
+        out["kv_window"] = horizon
     if fallback:
         out["kv_block_fallback"] = True
     return out
@@ -726,6 +741,13 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
         sized from the prompt-length distribution (see
         :func:`_plan_kv_pool`), and their prefill mode is pinned to
         ``chunked`` (a block pool has no one-shot splice path);
+      * ``sliding_window`` — window width of a sliding-attention family
+        (0 = full attention): the paged pool runs in ring mode and its
+        geometry tiles the *window*, not ``max_len`` — admission prices
+        O(window) blocks per request;
+      * ``constant_state`` — the family carries recurrent (SSM/hybrid)
+        state: per-request decode state is O(1) in context, surfaced as
+        ``kv_growth: "constant"`` in the plan;
       * ``spec`` — ``"off"`` (default), ``"ngram"`` or ``"draft"``:
         speculative engines additionally get a planned ``spec_k`` draft
         length chosen from ``SERVE_SPEC_KS`` by the observed
@@ -753,6 +775,8 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     can_chunk = bool(o.get("can_chunk", True))
     ratio = float(o.get("chunk_ratio", 4.0))
     shards = int(o.get("mesh_shards", 1))
+    window = int(o.get("sliding_window", 0))
+    constant_state = bool(o.get("constant_state", False))
 
     if decode_s > 0.0 and prefill_tok_s > 0.0:
         # largest chunk whose modeled cost stays under `ratio` decode steps:
@@ -820,10 +844,16 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     }
     if shards > 1:
         plan["mesh_shards"] = shards
+    # how per-request KV grows with context — the dataflow shape the cache
+    # family gives the serving plan: "linear" (full attention, O(seq)),
+    # "window" (sliding, O(window)), "constant" (SSM/hybrid recurrent
+    # state; a hybrid's sliding attention layers are window-bounded too)
+    plan["kv_growth"] = ("constant" if constant_state
+                         else "window" if window else "linear")
     if kv == "paged":
         plan["kv"] = kv
         plan.update(_plan_kv_pool(slots, max_len, chunk, avg_prompt,
-                                  shards))
+                                  shards, window))
     # the serving engine resolves a KernelPlan once (kernel_select pass)
     # and hands it back through every replan: echoing it into the serve
     # plan keeps the per-site backend choice visible in stats()/reports
@@ -872,7 +902,13 @@ register_pass(Pass(
 #:                         table into a dense view | ``fold`` replace the K
 #:                         gather with an exact one-hot contraction, bit-
 #:                         identical | ``pallas`` scalar-prefetched kernel);
+#:   * ``decode_ring``   — wraparound ring-paged decode attention for
+#:                         sliding-window families (``gather`` only today:
+#:                         gather the ring block table into a slot-ordered
+#:                         dense view, then dense masked attention);
 #:   * ``prefill_chunk`` — chunked prefill attention (``xla`` only today);
+#:   * ``ssm_scan``      — the masked SSD state-scan of SSM/hybrid decode
+#:                         and chunked prefill (``xla`` only today);
 #:   * ``linked_matmul`` — the linked cbra op in the CNN engine
 #:                         (``xla`` fused | ``pallas`` linked_cbr_pool);
 #:   * ``sampler``       — per-request token sampling (``reference`` two-sort
@@ -881,9 +917,11 @@ register_pass(Pass(
 KERNEL_SITE_BACKENDS: dict[str, tuple[str, ...]] = {
     "decode_dense": ("xla", "pallas"),
     "decode_paged": ("gather", "fold", "pallas"),
+    "decode_ring": ("gather",),
     "prefill_chunk": ("xla",),
     "linked_matmul": ("xla", "pallas"),
     "sampler": ("reference", "fused", "pallas"),
+    "ssm_scan": ("xla",),
 }
 
 
@@ -901,9 +939,11 @@ class KernelPlan:
 
     decode_dense: str = "xla"
     decode_paged: str = "gather"
+    decode_ring: str = "gather"
     prefill_chunk: str = "xla"
     linked_matmul: str = "xla"
     sampler: str = "reference"
+    ssm_scan: str = "xla"
 
     def __post_init__(self):
         for site, backend in self.items():
@@ -1014,10 +1054,12 @@ def select_kernel_plan(options: dict[str, Any] | None = None,
         or ("pallas" if tpu else "xla"),
         decode_paged=measured("decode_paged")
         or ("pallas" if tpu else paged_default),
+        decode_ring=measured("decode_ring") or "gather",
         prefill_chunk=measured("prefill_chunk") or "xla",
         linked_matmul=measured("linked_matmul")
         or ("pallas" if tpu else "xla"),
         sampler=measured("sampler") or ("pallas" if tpu else "fused"),
+        ssm_scan=measured("ssm_scan") or "xla",
     )
     return plan, detail
 

@@ -21,6 +21,7 @@ produced no throughput — CI runs this as the serving smoke check.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -38,6 +39,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--sliding-window", type=int, default=None,
+                    help="serve the arch with this sliding-attention "
+                         "window (tokens): per-request KV stays O(window) "
+                         "— with --kv paged the pool runs window-sized "
+                         "ring block tables; logits are identical to full "
+                         "attention while context <= window")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=12)
@@ -56,7 +63,9 @@ def main(argv=None):
                          "per slot; 'paged' allocates fixed-size blocks "
                          "per request from a pool, with shared prompt "
                          "prefixes mapped to the same blocks (requires "
-                         "chunked prefill on a full-attention arch)")
+                         "chunked prefill on an attention arch; a "
+                         "sliding-window arch pages a wraparound ring "
+                         "sized to the window)")
     ap.add_argument("--kv-block-size", type=int, default=None,
                     help="tokens per KV block (default: planned by the "
                          "serve_schedule pass)")
@@ -103,6 +112,12 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.sliding_window is not None:
+        if args.sliding_window <= 0:
+            raise SystemExit("--sliding-window must be positive")
+        cfg = dataclasses.replace(
+            cfg, name=f"{cfg.name}-swa{args.sliding_window}",
+            sliding_window=args.sliding_window)
     if cfg.is_encoder_decoder:
         raise SystemExit("serve.py drives decoder-only archs; for seamless "
                          "see examples/translate_audio.py")

@@ -343,6 +343,42 @@ def init_paged_kv_cache(batch: int, pool_blocks: int, block_size: int,
     )
 
 
+class PagedRingKVCache(NamedTuple):
+    """Wraparound-aware paged ring for sliding-window attention.
+
+    The block table is *window-sized*: ``M = W // bs`` blocks cover ring
+    slots, not logical positions — position ``p`` lives at ring slot
+    ``p % W``, i.e. ``(block_tables[b, (p % W) // bs], (p % W) % bs)``.
+    As the window slides, new tokens overwrite the slots of tokens that
+    just fell out of the window, so a request holds O(window) pool
+    blocks forever regardless of sequence length.
+
+    ``positions`` mirrors the dense ring's per-slot metadata (absolute
+    position, -1 = empty): the gathered ``(B, W, K, D)`` view is in
+    *ring-slot order*, exactly the dense :class:`KVCache` layout, so the
+    dense decode/chunk attends — and their window masks — apply
+    verbatim.  That layout identity is what keeps the ring engine
+    bit-identical to the dense sliding-window oracle.
+    """
+    k: jax.Array             # (P, bs, K, D) physical pool
+    v: jax.Array             # (P, bs, K, D)
+    block_tables: jax.Array  # (B, M) int32 ring-slot-order, -1 = unassigned
+    positions: jax.Array     # (B, W) int32 absolute position per slot, -1 empty
+    length: jax.Array        # (B,) int32 tokens seen so far
+
+
+def init_paged_ring_kv_cache(batch: int, pool_blocks: int, block_size: int,
+                             max_blocks: int, n_kv: int, head_dim: int,
+                             dtype=jnp.bfloat16) -> PagedRingKVCache:
+    return PagedRingKVCache(
+        k=jnp.zeros((pool_blocks, block_size, n_kv, head_dim), dtype),
+        v=jnp.zeros((pool_blocks, block_size, n_kv, head_dim), dtype),
+        block_tables=jnp.full((batch, max_blocks), -1, jnp.int32),
+        positions=jnp.full((batch, max_blocks * block_size), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
 def rollback_kv_cache(cache: KVCache, keep_len: jax.Array,
                       rows: jax.Array) -> KVCache:
     """Rewind slot rows ((B,) bool) to ``keep_len`` ((B,) int) context
@@ -429,6 +465,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
                            cross_kv: tuple[jax.Array, jax.Array] | None = None,
                            dense_backend: str = "xla",
                            paged_backend: str = "gather",
+                           ring_backend: str = "gather",
                            live: jax.Array | None = None,
                            shard_axis: str | None = None
                            ) -> tuple[jax.Array, KVCache]:
@@ -484,6 +521,14 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
         return jnp.einsum("bhk,hkd->bd", y,
                           p["wo"].astype(x.dtype))[:, None], new_cache
 
+    if isinstance(cache, PagedRingKVCache):
+        y, new_cache = _ring_decode_write_attend(
+            q, k_new, v_new, cache, cfg=cfg, live=live,
+            dense_backend=dense_backend, backend=ring_backend)
+        y = _gather_heads(y, shard_axis, axis=1)
+        return jnp.einsum("bhk,hkd->bd", y,
+                          p["wo"].astype(x.dtype))[:, None], new_cache
+
     W = cache.k.shape[1]
     slot = (pos % W).astype(jnp.int32)         # ring-buffer write index
     bidx = jnp.arange(B)
@@ -533,6 +578,55 @@ def _paged_decode_write_attend(q: jax.Array, k_new: jax.Array,
                                  new_len, backend)
     return out, PagedKVCache(k=k_pool, v=v_pool,
                              block_tables=cache.block_tables, length=new_len)
+
+
+def _ring_decode_write_attend(q: jax.Array, k_new: jax.Array,
+                              v_new: jax.Array, cache: PagedRingKVCache, *,
+                              cfg, live: jax.Array | None,
+                              dense_backend: str = "xla",
+                              backend: str = "gather"
+                              ) -> tuple[jax.Array, PagedRingKVCache]:
+    """Scatter one token into the ring pool and attend over the window.
+
+    The write lands at ring slot ``pos % W`` — past the window, that slot
+    belongs to the token ``W`` positions back, which just slid out: the
+    overwrite *is* the "oldest block frees as the window slides" step, at
+    token granularity within the request's fixed block lease.  Dead rows
+    (and rows with no lease yet) scatter out of bounds and drop, same as
+    the classic paged pool.  The attend mask is the dense ring's
+    (written ``&`` inside the window), over the gathered ring-slot-order
+    view, so outputs match the dense sliding-window engine bit for bit.
+    """
+    if backend != "gather":
+        raise ValueError(f"unknown decode_ring backend {backend!r}")
+    B = q.shape[0]
+    P, bs = cache.k.shape[0], cache.k.shape[1]
+    M = cache.block_tables.shape[1]
+    W = M * bs
+    pos = cache.length
+    if live is None:
+        live = jnp.ones((B,), bool)
+    bidx = jnp.arange(B)
+    slot = (pos % W).astype(jnp.int32)
+    blk = cache.block_tables[bidx, slot // bs]
+    ok = live & (blk >= 0)                     # the ring wraps by design
+    safe_blk = jnp.where(ok, blk, P)           # P = out of bounds -> dropped
+    off = (slot % bs).astype(jnp.int32)
+    k_pool = cache.k.at[safe_blk, off].set(
+        k_new.astype(cache.k.dtype), mode="drop")
+    v_pool = cache.v.at[safe_blk, off].set(
+        v_new.astype(cache.v.dtype), mode="drop")
+    positions = cache.positions.at[bidx, slot].set(
+        jnp.where(ok, pos, cache.positions[bidx, slot]))
+    new_len = jnp.where(ok, pos + 1, pos).astype(jnp.int32)
+    k_cache, v_cache = paged_kv_view(k_pool, v_pool, cache.block_tables)
+    valid = positions >= 0
+    if cfg.sliding_window:
+        valid &= positions > (pos[:, None] - cfg.sliding_window)
+    out = decode_attention(q, k_cache, v_cache, valid, dense_backend)
+    return out, PagedRingKVCache(k=k_pool, v=v_pool,
+                                 block_tables=cache.block_tables,
+                                 positions=positions, length=new_len)
 
 
 def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
@@ -720,4 +814,55 @@ def prefill_chunk_into_paged_cache(p: dict[str, jax.Array], x: jax.Array,
     y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype, shard_axis)
     new_cache = PagedKVCache(k=k_pool, v=v_pool,
                              block_tables=cache.block_tables, length=length)
+    return y, new_cache
+
+
+def prefill_chunk_into_ring_cache(p: dict[str, jax.Array], x: jax.Array,
+                                  cache: PagedRingKVCache, *, cfg,
+                                  offsets: jax.Array, n_new: jax.Array,
+                                  shard_axis: str | None = None
+                                  ) -> tuple[jax.Array, PagedRingKVCache]:
+    """Chunked prefill against the wraparound ring pool.
+
+    Same contract as :func:`prefill_chunk_into_cache`; K/V land at ring
+    slot ``pos % W`` through the window-sized block table.  A prompt
+    longer than the window simply laps the ring — earlier slots are
+    overwritten by the positions that displace them, and the per-slot
+    ``positions`` metadata plus the dense window mask keep exactly the
+    last ``window`` tokens attendable, matching the dense sliding ring
+    bit for bit.
+    """
+    B, C, _ = x.shape
+    P, bs = cache.k.shape[0], cache.k.shape[1]
+    M = cache.block_tables.shape[1]
+    W = M * bs
+    q, k_new, v_new, pos = _chunk_qkv(p, x, cfg=cfg, offsets=offsets)
+
+    valid_new = jnp.arange(C)[None, :] < n_new[:, None]      # (B, C)
+    slot = (pos % W).astype(jnp.int32)
+    blk = jnp.take_along_axis(cache.block_tables, slot // bs, axis=1)
+    ok = valid_new & (blk >= 0)
+    safe_blk = jnp.where(ok, blk, P)           # P = out of bounds -> dropped
+    off = (slot % bs).astype(jnp.int32)
+    k_pool = cache.k.at[safe_blk, off].set(
+        k_new.astype(cache.k.dtype), mode="drop")
+    v_pool = cache.v.at[safe_blk, off].set(
+        v_new.astype(cache.v.dtype), mode="drop")
+    bidx = jnp.arange(B)[:, None]
+    positions = cache.positions.at[bidx, slot].set(
+        jnp.where(ok, pos, cache.positions[bidx, slot]))
+    length = jnp.where(n_new > 0, offsets + n_new, cache.length) \
+        .astype(jnp.int32)
+
+    # dense-ring attend mask over the ring-slot-order view: written,
+    # causally visible, and inside the sliding window
+    k_cache, v_cache = paged_kv_view(k_pool, v_pool, cache.block_tables)
+    attend = (positions[:, None, :] >= 0) \
+        & (positions[:, None, :] <= pos[:, :, None])         # (B, C, W)
+    if cfg.sliding_window:
+        attend &= positions[:, None, :] > pos[:, :, None] - cfg.sliding_window
+    y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype, shard_axis)
+    new_cache = PagedRingKVCache(k=k_pool, v=v_pool,
+                                 block_tables=cache.block_tables,
+                                 positions=positions, length=length)
     return y, new_cache

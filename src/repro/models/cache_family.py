@@ -1,0 +1,124 @@
+"""Per-layer cache-family descriptors: the serving stack's dataflow map.
+
+The paper's core claim is that inference performance lives in the
+*dataflow shape* of the graph, not in per-operator tuning.  On the cache
+plane that shape is per layer: a full-attention layer grows KV with the
+sequence, a sliding-window layer holds a bounded ring of the last
+``window`` tokens, and an SSM layer carries constant-size recurrent
+state with no KV at all.  Hybrid (hymba-style) stacks mix attention and
+SSM state *within one layer*.
+
+Before this module every serving component re-derived that shape from
+``cfg.attention_only`` and rejected anything else with a family
+``ValueError``.  Now each layer gets a :class:`CacheFamily` descriptor
+and the engine/scheduler/pipeline dispatch through the predicates below:
+
+* ``supports_chunked_prefill`` — can the stack run incremental prefill
+  chunks against row-addressed caches?  True for every decoder-only
+  family including SSM/hybrid (the masked SSD scan in ``models/ssm.py``
+  makes constant-state layers chunkable).
+* ``supports_paged`` — can the KV plane live in a shared block pool?
+  True for attention-only stacks: all-full layers take the classic
+  paged pool, all-sliding layers take the wraparound ring pool
+  (window-sized block tables).  SSM/hybrid state is dense-per-slot.
+* ``supports_spec`` — can speculative decoding roll the cache back?
+  Only uniform full-attention stacks: rollback across an evicted
+  sliding-window block is undefined (ROADMAP defers it) and SSM state
+  updates are not reversible.
+
+Configs in this repo are per-layer *homogeneous* (every layer of a
+model shares one family), so cache init still broadcasts one layer
+cache across ``n_layers`` — the descriptor tuple is the contract that
+lets a future heterogeneous stack break that assumption without
+touching the engine again.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheFamily:
+    """What one decoder layer needs from the cache plane.
+
+    ``kv`` is the attention cache shape: ``"full"`` (KV grows with the
+    sequence up to the horizon), ``"sliding"`` (a bounded ring of the
+    last ``window`` tokens), or ``"none"`` (no attention KV — pure
+    SSM).  ``ssm`` marks constant-size recurrent state (SSD state +
+    conv tail) alongside — or instead of — the KV cache.
+    """
+    kv: str = "full"            # "full" | "sliding" | "none"
+    window: int = 0             # ring width when kv == "sliding"
+    ssm: bool = False           # carries SSD state + conv tail
+
+    def __post_init__(self):
+        if self.kv not in ("full", "sliding", "none"):
+            raise ValueError(f"unknown kv cache family {self.kv!r}")
+        if self.kv == "sliding" and self.window <= 0:
+            raise ValueError("sliding cache family needs window > 0")
+        if self.kv == "none" and not self.ssm:
+            raise ValueError("a layer with no KV must carry SSM state")
+
+
+def layer_cache_families(cfg) -> tuple:
+    """The per-layer cache descriptors for a config, length ``n_layers``."""
+    if cfg.family == "ssm":
+        fam = CacheFamily(kv="none", ssm=True)
+    elif cfg.family == "hybrid":
+        fam = CacheFamily(
+            kv="sliding" if cfg.sliding_window else "full",
+            window=cfg.sliding_window, ssm=True)
+    elif cfg.sliding_window:
+        fam = CacheFamily(kv="sliding", window=cfg.sliding_window)
+    else:
+        fam = CacheFamily(kv="full")
+    return (fam,) * cfg.n_layers
+
+
+def supports_chunked_prefill(cfg) -> bool:
+    """Chunked prefill needs row-addressed decoder caches: any
+    decoder-only stack qualifies, including SSM/hybrid via the masked
+    SSD chunk update (``ssm.mamba2_chunk_update``) — attention-free
+    pure-SSM stacks (mamba2: ``n_heads == 0``) very much included;
+    per-row stop lengths are exactly what the masked scan provides."""
+    if cfg.is_encoder_decoder:
+        return False
+    return all(f.kv in ("full", "sliding", "none")
+               for f in layer_cache_families(cfg))
+
+
+def supports_paged(cfg) -> bool:
+    """Block-pool KV needs attention-only layers (SSM state is dense
+    per slot, never pooled).  All-full stacks use the classic paged
+    pool; all-sliding stacks use the wraparound ring pool."""
+    if cfg.is_encoder_decoder or cfg.attn_free:
+        return False
+    fams = layer_cache_families(cfg)
+    return all(not f.ssm and f.kv in ("full", "sliding") for f in fams)
+
+
+def paged_kind(cfg) -> str:
+    """Which pool layout a paged engine builds: ``"paged"`` (classic,
+    all-full) or ``"ring"`` (wraparound window, all-sliding).  Only
+    meaningful when :func:`supports_paged` is true."""
+    fams = layer_cache_families(cfg)
+    return "ring" if any(f.kv == "sliding" for f in fams) else "paged"
+
+
+def supports_spec(cfg) -> bool:
+    """Speculative decoding needs rollback: uniform full-attention KV
+    only.  Sliding windows evict the blocks a rollback would restore
+    (deferred in ROADMAP); SSM state updates are not reversible."""
+    return all(f.kv == "full" and not f.ssm
+               for f in layer_cache_families(cfg)) and not cfg.attn_free \
+        and not cfg.is_encoder_decoder
+
+
+def family_label(cfg) -> str:
+    """Human-readable dataflow-shape label for errors and stats."""
+    fams = layer_cache_families(cfg)
+    if any(f.ssm for f in fams):
+        return "hybrid" if any(f.kv != "none" for f in fams) else "ssm"
+    if any(f.kv == "sliding" for f in fams):
+        return "sliding"
+    return "full"

@@ -20,6 +20,7 @@ from repro.distributed import sharding as SH
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
 
 from . import attention as A
+from . import cache_family as CF
 from . import transformer as T
 from .layers import (abstract_params, cross_entropy, embed_lookup,
                      embed_specs, init_params, logical_axes, param_count,
@@ -183,25 +184,29 @@ class Model:
                           block_size: int, max_blocks: int):
         """Block-paged serving caches: one physical pool per layer plus
         per-slot block tables (``repro.serving.kv_pool`` owns allocation).
-        Attention-only, full-attention families: a recurrent scan has no
-        pageable state and a sliding-window ring would need paged
-        wraparound (future work).
+
+        Dispatches on the per-layer cache families: all-``full`` layers
+        get the classic logical-order pool, all-``sliding`` layers get the
+        wraparound ring pool (window-sized tables, ``max_blocks`` covering
+        ring slots).  SSM/hybrid state is dense per slot and never pooled.
         """
         cfg = self.cfg
-        if not cfg.attention_only:
+        if not CF.supports_paged(cfg):
             raise NotImplementedError(
-                f"paged KV needs attention-only layers, not {cfg.family}")
-        if cfg.sliding_window:
-            raise NotImplementedError(
-                "paged KV does not support sliding-window caches yet")
+                "paged KV needs attention-only cache families "
+                f"(full or sliding per layer), not {CF.family_label(cfg)}")
         one = T.init_paged_layer_cache(cfg, batch, pool_blocks, block_size,
-                                       max_blocks, self.dtype)
+                                       max_blocks, self.dtype,
+                                       kind=CF.paged_kind(cfg))
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
 
     @staticmethod
     def _is_paged(caches) -> bool:
-        return isinstance(caches.kv, A.PagedKVCache)
+        """Pool-backed caches (classic paged or ring paged): physical
+        blocks are shared across rows, so live masks must act at the
+        scatter rather than by post-hoc row restore."""
+        return isinstance(caches.kv, (A.PagedKVCache, A.PagedRingKVCache))
 
     def prefill_step(self, params, batch, batch_axes=(), max_len: int = 0):
         """Run the prompt, return (last-position logits, populated caches).
@@ -302,39 +307,65 @@ class Model:
         valid chunk position (B, V), updated caches).  B is the *full* slot
         batch — decode-phase rows ride along with n_new=0, which is what
         lets one fixed-shape jitted function interleave prefill chunks with
-        decode steps.  Attention families only (see prefill_step).
+        decode steps.
+
+        Dispatch is per cache family: attention layers extend their ring /
+        paged / ring-paged KV, SSM layers advance their recurrent state
+        through the masked SSD scan (``ssm.mamba2_chunk_update`` — per-row
+        stop lengths, identity transitions past ``n_new``), and hybrid
+        layers do both on the same normed input.
         """
         cfg = self.cfg
-        if not cfg.attention_only:
+        if not CF.supports_chunked_prefill(cfg):
             raise NotImplementedError(
-                f"chunked prefill needs attention-only layers, not "
+                f"chunked prefill needs decoder-only cache families, not "
                 f"{cfg.family}")
-        paged = self._is_paged(caches)
-        chunk_fn = A.prefill_chunk_into_paged_cache if paged \
-            else A.prefill_chunk_into_cache
+        if self._is_paged(caches):
+            chunk_fn = A.prefill_chunk_into_ring_cache \
+                if isinstance(caches.kv, A.PagedRingKVCache) \
+                else A.prefill_chunk_into_paged_cache
+        else:
+            chunk_fn = A.prefill_chunk_into_cache
         B, C = tokens.shape
         x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
 
         def body(carry, inp):
             h = carry
             lp, cache = inp
+            fam = cfg.family
             hn = rms_norm(h, lp["norm1"])
-            att, kv = chunk_fn(
-                lp["attn"], hn, cache.kv, cfg=cfg, offsets=offsets,
-                n_new=n_new, shard_axis=shard_axis)
-            h = h + att
+            new_cache = cache
+            if fam == "ssm":
+                y, sc = T.S.mamba2_chunk_update(lp["ssm"], hn, cache.ssm,
+                                                cfg=cfg, n_new=n_new)
+                return h + y, new_cache._replace(ssm=sc)
+            if fam == "hybrid":
+                att, kv = chunk_fn(
+                    lp["attn"], hn, cache.kv, cfg=cfg, offsets=offsets,
+                    n_new=n_new, shard_axis=shard_axis)
+                y, sc = T.S.mamba2_chunk_update(lp["ssm"], hn, cache.ssm,
+                                                cfg=cfg, n_new=n_new)
+                h = h + 0.5 * (att * lp["attn_scale"].astype(h.dtype)
+                               + y * lp["ssm_scale"].astype(h.dtype))
+                new_cache = new_cache._replace(kv=kv, ssm=sc)
+            else:
+                att, kv = chunk_fn(
+                    lp["attn"], hn, cache.kv, cfg=cfg, offsets=offsets,
+                    n_new=n_new, shard_axis=shard_axis)
+                h = h + att
+                new_cache = new_cache._replace(kv=kv)
             h2 = rms_norm(h, lp["norm2"])
-            if cfg.family == "moe":
+            if fam == "moe":
                 mo, _ = T.M.moe_block(lp["moe"], h2, cfg=cfg, mesh=self.mesh,
                                       batch_axes=batch_axes)
                 if cfg.moe_dense_residual:
                     mo = mo + T.swiglu(lp["dense_mlp"], h2)
                 h = h + mo
-            elif cfg.family == "audio":
+            elif fam == "audio":
                 h = h + T.gelu_mlp(lp["mlp"], h2)
             else:
                 h = h + T.swiglu(lp["mlp"], h2, shard_axis)
-            return h, cache._replace(kv=kv)
+            return h, new_cache
 
         x, new_caches = T.scan_or_unroll(body, x, (params["layers"], caches),
                                          cfg.scan_layers)
@@ -370,6 +401,7 @@ class Model:
             params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
             batch_axes=batch_axes, dense_backend=plan.decode_dense,
             paged_backend=plan.decode_paged,
+            ring_backend=plan.decode_ring, ssm_backend=plan.ssm_scan,
             live=live if paged else None, shard_axis=shard_axis)
         if live is not None and not paged:
             def keep(new, old):
@@ -400,7 +432,7 @@ class Model:
         """
         cfg = self.cfg
         plan = plan if plan is not None else self.kernel_plan
-        if not cfg.attention_only or cfg.sliding_window:
+        if not CF.supports_spec(cfg):
             raise NotImplementedError(
                 "speculative verify needs a full-attention family (rollback "
                 f"rewinds the cache by position), not {cfg.family}"
@@ -419,6 +451,7 @@ class Model:
                 params["layers"], x, caches, cfg=cfg, mesh=self.mesh,
                 batch_axes=batch_axes, dense_backend=plan.decode_dense,
                 paged_backend=plan.decode_paged,
+                ring_backend=plan.decode_ring, ssm_backend=plan.ssm_scan,
                 live=step_live if paged else None, shard_axis=shard_axis)
             if not paged:
                 def keep(new, old):
@@ -440,11 +473,15 @@ class Model:
         moves back; paged: a pure length truncation (the host-side pool
         frees strandable tail blocks separately)."""
         kv = caches.kv
-        if not hasattr(kv, "length"):
+        if not hasattr(kv, "length") or caches.ssm != ():
             raise NotImplementedError(
                 f"{self.cfg.family} caches carry recurrent state that "
                 "cannot be rewound; speculative decoding needs an "
                 "attention-only family")
+        if isinstance(kv, A.PagedRingKVCache):
+            raise NotImplementedError(
+                "sliding-window ring caches cannot roll back: positions "
+                "past the window were evicted by the wraparound write")
         if isinstance(kv, A.PagedKVCache):
             kv = A.rollback_paged_kv_cache(kv, keep_len, rows)
         else:
@@ -512,4 +549,10 @@ def _conv_tail(hn, lp, cfg):
     xs = zx[..., di:]
     bc = hn @ p["w_bc"].astype(hn.dtype)
     conv_in = jnp.concatenate([xs, bc], axis=-1)
-    return conv_in[:, -(cfg.ssm_conv - 1):, :]
+    k1 = cfg.ssm_conv - 1
+    if conv_in.shape[1] < k1:
+        # a prompt shorter than the register: the positions before it are
+        # the zeros the causal conv left-pads with
+        conv_in = jnp.pad(conv_in, ((0, 0), (k1 - conv_in.shape[1], 0),
+                                    (0, 0)))
+    return conv_in[:, -k1:, :]

@@ -170,9 +170,90 @@ def mamba2_block(p: dict[str, jax.Array], x: jax.Array, *, cfg,
     return out
 
 
+def mamba2_chunk_update(p: dict[str, jax.Array], x: jax.Array,
+                        cache: SSMCache, *, cfg, n_new: jax.Array,
+                        backend: str = "xla",
+                        ) -> tuple[jax.Array, SSMCache]:
+    """Masked SSD scan over one serving chunk with per-row stop lengths.
+
+    ``x`` is a fixed-width ``(B, C, d)`` chunk buffer; row ``b`` carries
+    ``n_new[b]`` valid new tokens (0 for bystander rows sharing the
+    batch).  Positions past ``n_new`` are forced to *identity
+    transitions* — ``dt = 0`` (decay ``exp(0) = 1``, zero input) with
+    ``x/B/C`` zeroed — exactly the neutral padding :func:`mamba2_block`
+    appends to reach a chunk multiple, so the recurrent state after this
+    call equals the state after the row's valid prefix alone.  The
+    depthwise conv runs over ``concat([cache.conv, conv_in])`` with the
+    same VALID-padded primitive as :func:`_causal_conv` (a zeroed cache
+    on the first chunk *is* that function's left zero-pad), and the
+    shift register advances by each row's own ``n_new`` — bystander rows
+    get their cache back untouched, bit for bit.
+
+    Chunked prefill through this function is bit-identical to one-shot
+    :func:`mamba2_block` prefill when the serving chunk width equals
+    ``cfg.ssm_chunk``: every serving chunk is then one SSD chunk, so the
+    sequential state carry here *is* the inter-chunk ``lax.scan`` of the
+    one-shot path, bracketed identically.
+    """
+    if backend != "xla":
+        raise ValueError(f"unknown ssm_scan backend {backend!r}")
+    Bsz, C, d = x.shape
+    di, g, n, nh = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    zx = x @ p["w_zx"].astype(x.dtype)
+    z, xs = zx[..., :di], zx[..., di:]
+    bc = x @ p["w_bc"].astype(x.dtype)
+    dt = x @ p["w_dt"].astype(x.dtype)
+    conv_in = jnp.concatenate([xs, bc], axis=-1)           # (B, C, conv_dim)
+    full = jnp.concatenate([cache.conv.astype(x.dtype), conv_in], axis=1)
+    # same primitive as _causal_conv, with the shift register standing in
+    # for the left zero-pad (identical when the cache is zeros at chunk 0)
+    conv = lax.conv_general_dilated(
+        full, p["conv_w"].astype(x.dtype)[:, None, :], window_strides=(1,),
+        padding="VALID", dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=full.shape[-1])
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+    # per-row tail: the K-1 conv inputs ending at each row's last valid
+    # token.  full[n_new + t] = conv_in[n_new - K + 1 + t] — always a
+    # valid (or cached) input; an n_new=0 row reads back cache.conv.
+    tail_idx = n_new[:, None] + jnp.arange(K - 1)[None, :]   # (B, K-1)
+    new_conv = jnp.take_along_axis(full, tail_idx[..., None], axis=1)
+    xs, bc = conv[..., :di], conv[..., di:]
+    B_ = bc[..., :g * n].reshape(Bsz, C, g, n)
+    C_ = bc[..., g * n:].reshape(Bsz, C, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(Bsz, C, nh, hp)
+    # mask past each row's stop length: dt=0 / zero inputs are the same
+    # neutral padding mamba2_block uses, so masked steps leave the state
+    # bitwise unchanged and one-shot == chunked on the valid prefix
+    valid = jnp.arange(C)[None, :] < n_new[:, None]          # (B, C)
+    dt = jnp.where(valid[..., None], dt, 0.0)
+    xh = jnp.where(valid[..., None, None], xh, 0.0)
+    B_ = jnp.where(valid[..., None, None], B_, 0.0)
+    C_ = jnp.where(valid[..., None, None], C_, 0.0)
+    y, state = ssd_chunked(xh, dt, A, B_, C_, C, cache.state)
+    y = y + xh.astype(y.dtype) * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, C, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out"].astype(x.dtype)
+    # explicit per-row write-back: bystander rows keep their cache bit
+    # for bit even if their (stale) activations carried non-finite junk
+    row = n_new > 0
+    new_cache = SSMCache(
+        state=jnp.where(row[:, None, None, None], state, cache.state),
+        conv=jnp.where(row[:, None, None], new_conv.astype(cache.conv.dtype),
+                       cache.conv))
+    return out, new_cache
+
+
 def mamba2_decode(p: dict[str, jax.Array], x: jax.Array, cache: SSMCache,
-                  *, cfg) -> tuple[jax.Array, SSMCache]:
+                  *, cfg, backend: str = "xla") -> tuple[jax.Array, SSMCache]:
     """One-token recurrent step.  x: (B, 1, d)."""
+    if backend != "xla":
+        raise ValueError(f"unknown ssm_scan backend {backend!r}")
     Bsz = x.shape[0]
     di, g, n, nh = cfg.ssm_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
     hp = cfg.ssm_head_dim

@@ -206,17 +206,24 @@ def init_layer_cache(cfg, batch: int, width: int, src_len: int = 0,
 
 def init_paged_layer_cache(cfg, batch: int, pool_blocks: int,
                            block_size: int, max_blocks: int,
-                           dtype=jnp.bfloat16) -> LayerCache:
+                           dtype=jnp.bfloat16,
+                           kind: str = "paged") -> LayerCache:
     """Per-layer cache backed by a block pool instead of per-slot rows.
-    Attention-only families (the pool carve-out mirrors chunked prefill)."""
-    kv = A.init_paged_kv_cache(batch, pool_blocks, block_size, max_blocks,
-                               cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
+    Attention-only families (the pool carve-out mirrors chunked prefill).
+    ``kind``: ``"paged"`` (logical-order tables, full attention) or
+    ``"ring"`` (window-sized wraparound tables, sliding-window layers)."""
+    init = {"paged": A.init_paged_kv_cache,
+            "ring": A.init_paged_ring_kv_cache}[kind]
+    kv = init(batch, pool_blocks, block_size, max_blocks,
+              cfg.n_kv_heads, cfg.resolved_head_dim, dtype)
     return LayerCache(kv=kv)
 
 
 def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
                          batch_axes=(), dense_backend: str = "xla",
-                         paged_backend: str = "gather", live=None,
+                         paged_backend: str = "gather",
+                         ring_backend: str = "gather",
+                         ssm_backend: str = "xla", live=None,
                          shard_axis: str | None = None):
     """One-token decode through one layer.  x: (B, 1, d).
 
@@ -235,18 +242,22 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
         att, kv = A.attention_decode_block(p["attn"], h, cache.kv, cfg=cfg,
                                            dense_backend=dense_backend,
                                            paged_backend=paged_backend,
+                                           ring_backend=ring_backend,
                                            live=live)
-        ssm_o, sc = S.mamba2_decode(p["ssm"], h, cache.ssm, cfg=cfg)
+        ssm_o, sc = S.mamba2_decode(p["ssm"], h, cache.ssm, cfg=cfg,
+                                    backend=ssm_backend)
         x = x + 0.5 * (att * p["attn_scale"].astype(x.dtype)
                        + ssm_o * p["ssm_scale"].astype(x.dtype))
         new = new._replace(kv=kv, ssm=sc)
     elif fam == "ssm":
-        y, sc = S.mamba2_decode(p["ssm"], h, cache.ssm, cfg=cfg)
+        y, sc = S.mamba2_decode(p["ssm"], h, cache.ssm, cfg=cfg,
+                                backend=ssm_backend)
         return x + y, new._replace(ssm=sc)
     else:
         att, kv = A.attention_decode_block(p["attn"], h, cache.kv, cfg=cfg,
                                            dense_backend=dense_backend,
                                            paged_backend=paged_backend,
+                                           ring_backend=ring_backend,
                                            live=live, shard_axis=shard_axis)
         x = x + att
         new = new._replace(kv=kv)
@@ -272,7 +283,9 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
 
 def decoder_stack_decode(stacked, x, caches, *, cfg, mesh=None, batch_axes=(),
                          dense_backend: str = "xla",
-                         paged_backend: str = "gather", live=None,
+                         paged_backend: str = "gather",
+                         ring_backend: str = "gather",
+                         ssm_backend: str = "xla", live=None,
                          shard_axis: str | None = None):
     """caches: LayerCache pytree with a leading layer axis on every leaf."""
 
@@ -282,6 +295,8 @@ def decoder_stack_decode(stacked, x, caches, *, cfg, mesh=None, batch_axes=(),
                                             mesh=mesh, batch_axes=batch_axes,
                                             dense_backend=dense_backend,
                                             paged_backend=paged_backend,
+                                            ring_backend=ring_backend,
+                                            ssm_backend=ssm_backend,
                                             live=live, shard_axis=shard_axis)
         return y, new_cache
 

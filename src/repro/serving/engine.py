@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.core.pipeline import KernelPlan, StageTimer
 from repro.kernels.fused_sampler.ops import fused_sample, fused_sample_grid
+from repro.models import cache_family as CF
 
 from .kv_pool import KVBlockPool, PoolConfig
 from .sampling import SamplingParams, sample_token_grid, sample_tokens
@@ -219,6 +220,9 @@ class ServingEngine:
         self.greedy = greedy
         self.kv = kv
         self.pool: KVBlockPool | None = None
+        #: ring-window width (tokens) when the paged pool runs in ring
+        #: mode — admission prices this, not the decode horizon
+        self._kv_window = 0
         #: speculative policy for requests that carry no SpecParams of
         #: their own; SPEC_OFF = plain one-token-per-tick decode.
         self.default_spec = spec if spec is not None else SPEC_OFF
@@ -248,9 +252,16 @@ class ServingEngine:
         self._prefill_tokens = 0   # prompt tokens pushed through prefill
 
         cfg = model.cfg
+        if self.mesh_shards > 1 and any(f.ssm
+                                        for f in CF.layer_cache_families(cfg)):
+            raise ValueError(
+                "mesh-sharded serving does not support constant-state "
+                f"(SSM/hybrid) families ({CF.family_label(cfg)}): the "
+                "concat-TP partition specs cover attention KV only")
         auto_mode = prefill_mode is None
         if auto_mode:
-            prefill_mode = "chunked" if cfg.attention_only else "batched"
+            prefill_mode = ("chunked" if CF.supports_chunked_prefill(cfg)
+                            else "batched")
         if self.mesh_shards > 1 and prefill_mode != "chunked":
             # the one-shot prefill_step path is not shard-threaded (it
             # splices whole cache rows host-side); every sharded dispatch
@@ -260,17 +271,20 @@ class ServingEngine:
                 f"not {prefill_mode!r}")
         if kv == "paged":
             # paged KV rides on chunked prefill (a block pool has no
-            # one-shot row-splice path) and needs pageable attention state
-            if not cfg.attention_only or cfg.sliding_window:
+            # one-shot row-splice path) and needs pageable attention state:
+            # all-full layers take the paged pool, all-sliding layers the
+            # wraparound ring; constant-state (SSM/hybrid) layers hold no
+            # pageable KV and stay dense
+            if not CF.supports_paged(cfg):
                 raise ValueError(
-                    f"kv='paged' needs a full-attention family, not "
-                    f"{cfg.family}"
-                    + (" with a sliding window" if cfg.sliding_window else ""))
+                    f"kv='paged' needs an attention KV family, not "
+                    f"{CF.family_label(cfg)} (constant-state layers hold "
+                    "no pageable KV)")
             if prefill_mode != "chunked":
                 raise ValueError(
                     f"kv='paged' requires prefill_mode='chunked', "
                     f"not {prefill_mode!r}")
-        if prefill_mode == "chunked" and not cfg.attention_only:
+        if prefill_mode == "chunked" and not CF.supports_chunked_prefill(cfg):
             raise ValueError(f"{cfg.family} cannot run chunked prefill; "
                              f"use prefill_mode='batched'")
         self.scheduler = Scheduler(
@@ -281,7 +295,13 @@ class ServingEngine:
                 cfg.name, slots, cfg.d_model, cfg.d_ff or cfg.d_model,
                 cfg.vocab))
         self.scheduler.eos_id = None if eos_id < 0 else eos_id
-        self.scheduler.chunk_supported = cfg.attention_only
+        self.scheduler.chunk_supported = CF.supports_chunked_prefill(cfg)
+        # dataflow-shape facts the serve_schedule pass prices: a sliding
+        # window bounds per-request KV, recurrent state doesn't grow at all
+        if cfg.sliding_window:
+            self.scheduler.kv_window = min(cfg.sliding_window, max_len)
+        self.scheduler.constant_state = any(
+            f.ssm for f in CF.layer_cache_families(cfg))
         # replans feed the observed acceptance rate through serve_schedule
         # and adopt its planned spec_k (requests with k=None use it)
         self.scheduler.spec_mode = self.default_spec.mode
@@ -298,6 +318,12 @@ class ServingEngine:
             self._init_paged_kv(kv_block_size, kv_pool_blocks)
         else:
             self.caches = model.init_caches(slots, max_len)
+        # seed the pre-replan plan with the KV growth class so stats() is
+        # honest before the first serve_schedule pass runs (same
+        # derivation the pass itself uses)
+        self.scheduler.last_plan["kv_growth"] = (
+            "constant" if self.scheduler.constant_state
+            else "window" if self.scheduler.kv_window else "linear")
         self._kernel_report = None  # PassReport when the plan was routed
         self.kernel_plan = self._resolve_kernel_plan(kernel_plan,
                                                      kernel_timings)
@@ -374,15 +400,22 @@ class ServingEngine:
                              for site in KernelPlan().as_dict()})
 
     @staticmethod
-    def _check_spec_model(cfg) -> None:
+    def _check_spec_model(cfg, rid: int | None = None) -> None:
         """Speculative decoding rewinds the KV cache by position, which
         only a full-attention family supports (recurrent state cannot be
-        rolled back; a sliding-window ring conflates position and slot)."""
-        if not cfg.attention_only or cfg.sliding_window:
+        rolled back; a sliding-window ring has already freed the blocks a
+        rollback would rewind into).  With ``rid`` the error names the
+        offending request — the per-request ``submit()`` path, so a
+        spec-carrying request on a sliding/SSM engine fails loudly at
+        submission instead of being caught only at engine construction."""
+        if not CF.supports_spec(cfg):
+            who = f"request {rid}: " if rid is not None else ""
             raise ValueError(
-                "speculative decoding needs a full-attention family, not "
-                f"{cfg.family}"
-                + (" with a sliding window" if cfg.sliding_window else ""))
+                f"{who}speculative decoding needs a full-attention family, "
+                f"not {cfg.family}"
+                + (" with a sliding window" if cfg.sliding_window else "")
+                + " (rollback across an evicted window block or recurrent "
+                "state is undefined)")
 
     # -- paged KV -------------------------------------------------------------
     def _init_paged_kv(self, block_size: int | None,
@@ -391,12 +424,34 @@ class ServingEngine:
         ``serve_schedule`` pass (the same planner the scheduler replans
         through), which sizes ``block_size``/``pool_blocks`` from slots,
         the KV horizon and — once stats exist — the prompt-length
-        distribution."""
+        distribution.
+
+        A sliding-window family runs the pool in **ring** mode
+        (``CF.paged_kind``): every slot's block table tiles the *window*,
+        not the decode horizon, writes wrap in place, and admission is
+        priced against window-sized leases — long-chat KV is O(window)
+        instead of O(seq)."""
+        cfg = self.model.cfg
+        kind = CF.paged_kind(cfg)
+        window = 0
+        if kind == "ring":
+            window = min(cfg.sliding_window, self.max_len)
+            if self.scheduler.cfg.chunk > window:
+                raise ValueError(
+                    f"ring paged KV needs chunk "
+                    f"({self.scheduler.cfg.chunk}) <= window ({window}): a "
+                    "larger chunk would write the same ring slot twice in "
+                    "one scatter")
+        # the token span one slot's block table must tile: the window in
+        # ring mode, the full decode horizon otherwise
+        horizon = window or self.max_len
         if block_size is None or pool_blocks is None:
             from repro.core import pipeline
             options = {"slots": self.slots, "max_len": self.max_len,
                        "kv": "paged", "can_chunk": True,
                        "replan_every": self.scheduler.cfg.replan_every}
+            if window:
+                options["sliding_window"] = window
             if self.mesh_shards > 1:
                 options["mesh_shards"] = self.mesh_shards
             _, report = pipeline.optimize(
@@ -409,7 +464,7 @@ class ServingEngine:
                 # chunk, pushing prefix-cache hits out by a whole chunk
                 block_size = int(plan["kv_block_size"])
                 fitting = [b for b in pipeline.SERVE_KV_BLOCK_SIZES
-                           if self.max_len % b == 0
+                           if horizon % b == 0
                            and b <= max(self.scheduler.cfg.chunk, 8)]
                 if fitting:
                     block_size = min(block_size, max(fitting))
@@ -419,14 +474,17 @@ class ServingEngine:
                 # the dense-equivalent token budget) — taking the planner's
                 # count verbatim would over-allocate whenever the caller's
                 # block size differs from the planned one
-                pool_blocks = self.slots * (self.max_len // block_size)
-        if self.max_len % block_size:
+                pool_blocks = self.slots * (horizon // block_size)
+        if horizon % block_size:
+            what = f"window {horizon}" if window \
+                else f"max_len {self.max_len}"
             raise ValueError(
-                f"max_len {self.max_len} is not a multiple of the KV block "
-                f"size {block_size}: the block table must tile the horizon "
-                "exactly (this is also what keeps paged and dense decode "
+                f"{what} is not a multiple of the KV block size "
+                f"{block_size}: the block table must tile it exactly "
+                "(this is also what keeps paged and dense decode "
                 "bit-identical)")
-        max_blocks = self.max_len // block_size
+        max_blocks = horizon // block_size
+        self._kv_window = window
         self.pool = KVBlockPool(PoolConfig(
             block_size=block_size, pool_blocks=pool_blocks,
             max_blocks_per_seq=max_blocks, shards=self.mesh_shards))
@@ -434,6 +492,7 @@ class ServingEngine:
             self.slots, pool_blocks=pool_blocks, block_size=block_size,
             max_blocks=max_blocks)
         self.scheduler.kv_mode = "paged"
+        self.scheduler.kv_window = window
         self.scheduler.kv_gate = self._kv_gate
         self.scheduler.on_admit = self._kv_on_admit
         self.scheduler.on_release = self._kv_on_release
@@ -449,7 +508,8 @@ class ServingEngine:
         preemption victim's, when one is about to be evicted)?"""
         ok = self.pool.can_admit(
             sreq.prompt_tokens, self._kv_horizon(sreq),
-            victim_rid=victim.req.rid if victim is not None else None)
+            victim_rid=victim.req.rid if victim is not None else None,
+            window=self._kv_window)
         if not ok:
             self.pool.gated_rids.add(sreq.req.rid)
         return ok
@@ -459,7 +519,8 @@ class ServingEngine:
         already present in shared blocks, so the prefill starts there —
         those chunks are never dispatched at all."""
         _, cached = self.pool.allocate(sreq.req.rid, sreq.prompt_tokens,
-                                       self._kv_horizon(sreq))
+                                       self._kv_horizon(sreq),
+                                       window=self._kv_window)
         sreq.pos = cached
 
     def _kv_on_release(self, sreq) -> None:
@@ -470,7 +531,7 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         rspec = req.spec if req.spec is not None else self.default_spec
         if rspec.mode != "off":
-            self._check_spec_model(self.model.cfg)
+            self._check_spec_model(self.model.cfg, rid=req.rid)
             if rspec.mode == "draft" and self._draft is None:
                 raise ValueError(
                     f"request {req.rid} wants spec mode 'draft' but the "
@@ -553,8 +614,16 @@ class ServingEngine:
                     row = jnp.asarray(self.pool.block_table(sreq.req.rid))
                     bt = bt.at[:, sreq.slot].set(row)
                     ln = ln.at[:, sreq.slot].set(sreq.pos)
-                self.caches = self.caches._replace(
-                    kv=kv._replace(block_tables=bt, length=ln))
+                kv = kv._replace(block_tables=bt, length=ln)
+                if hasattr(kv, "positions"):
+                    # ring mode: a recycled slot may hold the previous
+                    # occupant's per-slot positions — clear them so the
+                    # attention validity mask (positions >= 0) starts empty
+                    pos = kv.positions
+                    for sreq in plan.admissions:
+                        pos = pos.at[:, sreq.slot].set(-1)
+                    kv = kv._replace(positions=pos)
+                self.caches = self.caches._replace(kv=kv)
                 return
             # dense: recycle the admitted rows so the first chunk sees an
             # empty ring buffer; one-shot modes skip this — their splice
@@ -920,6 +989,8 @@ class ServingEngine:
         if self.pool is not None:
             out["kv_pool"] = self.pool.stats()
             out["prefill_tokens_saved"] = self.pool.tokens_saved
+            if self._kv_window:
+                out["kv_window"] = self._kv_window
             if self.mesh_shards > 1:
                 # per-device geometry: block allocation is replicated (one
                 # host-side pool decides for every shard) but each shard

@@ -108,6 +108,10 @@ class _Lease:
     shared_blocks: int          # leading blocks shared at admission
     registered: int             # leading blocks this rid has registered
     chain: list[int]            # chain hash per registered prefix block
+    #: sliding-window ring lease: blocks cover ring *slots* and are
+    #: rewritten in place as the window slides, so they never register
+    #: in the prefix cache (their contents mutate) and never share
+    ring: bool = False
 
 
 class KVBlockPool:
@@ -166,14 +170,26 @@ class KVBlockPool:
         return len(shared), shared
 
     def can_admit(self, tokens: np.ndarray, horizon: int,
-                  victim_rid: int | None = None) -> bool:
+                  victim_rid: int | None = None, window: int = 0) -> bool:
         """Would ``allocate(tokens, horizon)`` succeed — counting a
         preemption victim's about-to-be-released blocks when given?  A
         victim block the probe already shares must not be credited as
         fresh capacity too (it is subtracted from ``needed`` instead);
         otherwise the gate would pass and the post-eviction ``allocate``
         raise.  Conservative: sharing can only grow once the victim's
-        remaining blocks park in the cache."""
+        remaining blocks park in the cache.
+
+        ``window > 0`` prices a sliding-window ring lease instead: the
+        request needs ``min(blocks_for(horizon), window // block_size)``
+        blocks *total*, no matter how long its context runs — admission
+        prices the window, not the horizon."""
+        if window:
+            extra = 0
+            if victim_rid is not None and victim_rid in self.leases:
+                extra = sum(1 for b in self.leases[victim_rid].blocks
+                            if self.refcount[b] == 1)
+            return self._ring_blocks(horizon, window) \
+                <= self.available() + extra
         n_shared, shared_ids = self.probe(tokens)
         n_shared = self._cap_shared(n_shared, len(tokens))
         shared_ids = shared_ids[:n_shared]
@@ -203,20 +219,56 @@ class KVBlockPool:
             n_shared -= 1
         return max(n_shared, 0)
 
+    def _ring_blocks(self, horizon: int, window: int) -> int:
+        """Blocks a ring lease needs: the whole horizon while it fits the
+        window, then exactly the window — never more.  This fixed lease
+        with in-place wraparound reuse is the block-granularity form of
+        "oldest blocks free back as the window slides": the slot a token
+        vacates is the slot its successor ``window`` positions later
+        rewrites, so net occupancy is O(window) for any sequence length
+        (freeing and re-allocating the same block each slide would churn
+        the free list for an identical steady state)."""
+        return min(self.blocks_for(horizon), window // self.cfg.block_size)
+
     # -- allocate / free ----------------------------------------------------
     def allocate(self, rid: int, tokens: np.ndarray,
-                 horizon: int) -> tuple[list[int], int]:
+                 horizon: int, window: int = 0) -> tuple[list[int], int]:
         """Lease blocks for a request: ``tokens`` is its prefill context
         (prompt, plus previously-generated tokens after a preemption) and
         ``horizon`` the max context it may reach (prompt + decode budget,
         clamped to max_len by the engine).  Returns ``(block_table,
-        cached_tokens)`` — the prefill may start at ``cached_tokens``."""
+        cached_tokens)`` — the prefill may start at ``cached_tokens``.
+
+        ``window > 0`` leases a sliding-window ring: a window-sized block
+        table whose blocks are private and rewritten in place as the ring
+        wraps.  Ring blocks never enter the prefix cache — their contents
+        mutate, while registered blocks must stay immutable — so there is
+        no probe and no shared prefix (``cached_tokens`` is always 0)."""
         if rid in self.leases:
             raise PoolError(f"request {rid} already holds a lease")
         if horizon < len(tokens):
             raise PoolError(
                 f"request {rid}: horizon {horizon} shorter than its "
                 f"{len(tokens)}-token prefill context")
+        if window:
+            n_blocks = self._ring_blocks(horizon, window)
+            if n_blocks > self.cfg.max_blocks_per_seq:
+                raise PoolError(
+                    f"request {rid} needs {n_blocks} ring blocks; the "
+                    f"block table holds {self.cfg.max_blocks_per_seq}")
+            if n_blocks > self.available():
+                raise PoolError(
+                    f"pool exhausted: request {rid} needs {n_blocks} ring "
+                    f"blocks, {self.available()} allocatable")
+            blocks = []
+            for _ in range(n_blocks):
+                b = self._pop_fresh()
+                self.refcount[b] = 1
+                blocks.append(b)
+            self.leases[rid] = _Lease(
+                blocks=blocks, tokens=np.asarray(tokens, np.int32),
+                shared_blocks=0, registered=0, chain=[], ring=True)
+            return list(blocks), 0
         n_blocks = self.blocks_for(horizon)
         if n_blocks > self.cfg.max_blocks_per_seq:
             raise PoolError(
@@ -264,8 +316,12 @@ class KVBlockPool:
         every newly *full* block under its chain hash so later admissions
         (including this request's own restore after a preemption) can share
         it.  Only prefill-written content is ever registered — see the
-        module docstring for why decode-written blocks are not."""
+        module docstring for why decode-written blocks are not.  Ring
+        leases never register: their blocks are rewritten in place as the
+        window slides, and a registered block must stay immutable."""
         lease = self.leases[rid]
+        if lease.ring:
+            return
         bs = self.cfg.block_size
         pos = min(int(pos), len(lease.tokens))
         while (lease.registered + 1) * bs <= pos:

@@ -155,6 +155,14 @@ class Scheduler:
         #: "dense" or "paged" — forwarded to the serve_schedule pass so a
         #: paged engine's replans keep the kv pool fields in the plan.
         self.kv_mode = "dense"
+        #: sliding-window width (tokens) of the engine's family (0 = full
+        #: attention) — forwarded to the serve_schedule pass so a ring
+        #: pool's replanned geometry keeps pricing the *window* and the
+        #: plan's ``kv_growth`` reflects the dataflow shape.
+        self.kv_window = 0
+        #: engine's family carries recurrent (SSM/hybrid) state —
+        #: forwarded so the plan prices constant-state decode.
+        self.constant_state = False
         #: speculative-decoding mode the engine runs ("off"|"ngram"|"draft")
         #: — forwarded to the serve_schedule pass so replans plan ``spec_k``
         #: from the observed acceptance rate.
@@ -410,6 +418,10 @@ class Scheduler:
         }
         if self.kv_mode != "dense":
             options["kv"] = self.kv_mode
+        if self.kv_window:
+            options["sliding_window"] = self.kv_window
+        if self.constant_state:
+            options["constant_state"] = True
         if self.mesh_shards > 1:
             options["mesh_shards"] = self.mesh_shards
         if self.kernel_plan:

@@ -1,6 +1,8 @@
 """Per-architecture smoke tests (assignment requirement): instantiate the
 REDUCED variant of each family and run one forward/train step on CPU,
 asserting output shapes + no NaNs."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -112,6 +114,21 @@ def test_full_config_matches_assignment(arch):
     for k, v in spec.items():
         assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
     assert cfg.source
+
+
+def test_reduced_clamps_sliding_window_to_max_len():
+    """The satellite bugfix: reduced() must clamp the sliding window
+    against the *reduced* horizon, not only the 64-token cap — a window
+    wider than its own max_len would never slide, silently masking every
+    wraparound code path in the smoke configs."""
+    base = all_configs()["hymba-1.5b"]
+    assert base.sliding_window == 1024
+    red = base.reduced()
+    assert red.sliding_window == min(64, red.max_len)
+    tight = dataclasses.replace(base, max_len=32).reduced()
+    assert tight.max_len == 32
+    assert tight.sliding_window == 32  # min(1024, 64, 32)
+    assert tight.sliding_window <= tight.max_len
 
 
 def test_input_shapes_assignment():

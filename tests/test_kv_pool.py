@@ -322,3 +322,58 @@ def test_randomized_accounting_equivalence():
         p.free(r)
     p.check_invariants()
     assert p.available() == p.cfg.pool_blocks
+
+
+# -- sliding-window ring leases ----------------------------------------------
+
+def test_ring_lease_prices_window_not_horizon():
+    """A ring lease needs min(blocks_for(horizon), window // bs) blocks
+    no matter how far the horizon runs: admission prices the window."""
+    p = _pool(bs=4, blocks=6, max_blocks=4)
+    # horizon 40 would need 10 classic blocks — more than the pool holds
+    assert not p.can_admit(_toks(*range(20)), horizon=40)
+    assert p.can_admit(_toks(*range(20)), horizon=40, window=16)
+    ids, cached = p.allocate(0, _toks(*range(20)), horizon=40, window=16)
+    assert len(ids) == 4 and cached == 0  # 16-token window / 4-token blocks
+    assert p.available() == 2
+    p.check_invariants()
+    p.free(0)
+    assert p.available() == 6
+    p.check_invariants()
+
+
+def test_ring_lease_short_context_takes_fewer_blocks():
+    """While the whole horizon fits the window the lease covers just the
+    horizon — the ring only grows to the window, never past it."""
+    p = _pool(bs=4, blocks=6, max_blocks=4)
+    ids, _ = p.allocate(0, _toks(1, 2, 3), horizon=6, window=16)
+    assert len(ids) == p.blocks_for(6) == 2
+    p.free(0)
+
+
+def test_ring_lease_never_registers_prefixes():
+    """Ring blocks are rewritten in place as the window slides, so they
+    must never enter the (immutable) prefix registry — and a later
+    classic probe must not share them."""
+    p = _pool(bs=4, blocks=8, max_blocks=4)
+    toks = _toks(*range(8))
+    p.allocate(0, toks, horizon=12, window=8)
+    p.note_prefilled(0, 8)
+    assert p.stats()["registered_prefixes"] == 0
+    p.free(0)
+    assert p.stats()["registered_prefixes"] == 0
+    assert p.available() == 8
+    # the same tokens through a classic lease do register
+    p.allocate(1, toks, horizon=12)
+    p.note_prefilled(1, 8)
+    assert p.stats()["registered_prefixes"] == 2
+    p.check_invariants()
+
+
+def test_ring_admission_counts_preemption_victim_blocks():
+    """The ring gate credits a victim's about-to-be-freed blocks, like
+    the classic gate does."""
+    p = _pool(bs=4, blocks=4, max_blocks=4)
+    p.allocate(0, _toks(*range(12)), horizon=16)  # 4 blocks: pool full
+    assert not p.can_admit(_toks(*range(8)), horizon=30, window=8)
+    assert p.can_admit(_toks(*range(8)), horizon=30, window=8, victim_rid=0)

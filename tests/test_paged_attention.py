@@ -124,6 +124,11 @@ def test_paged_rejects_unsupported_families():
     ssm = Model(all_configs()["mamba2-370m"].reduced())
     with pytest.raises(NotImplementedError, match="attention-only"):
         ssm.init_paged_caches(2, pool_blocks=8, block_size=8, max_blocks=4)
+    # sliding-window stacks are no longer rejected: they get the
+    # wraparound ring pool (window-sized block tables) instead of the
+    # classic logical-order pool
     swa = Model(dataclasses.replace(_cfg(), sliding_window=16))
-    with pytest.raises(NotImplementedError, match="sliding-window"):
-        swa.init_paged_caches(2, pool_blocks=8, block_size=8, max_blocks=4)
+    caches = swa.init_paged_caches(2, pool_blocks=8, block_size=8,
+                                   max_blocks=4)
+    assert isinstance(caches.kv, A.PagedRingKVCache)
+    assert caches.kv.block_tables.shape == (swa.cfg.n_layers, 2, 4)

@@ -276,6 +276,7 @@ def test_kernel_plan_defaults_are_the_seed_path():
     plan = pipeline.KernelPlan()
     assert plan.as_dict() == {
         "decode_dense": "xla", "decode_paged": "gather",
+        "decode_ring": "gather", "ssm_scan": "xla",
         "prefill_chunk": "xla", "linked_matmul": "xla",
         "sampler": "reference"}
     with pytest.raises(ValueError, match="decode_dense"):

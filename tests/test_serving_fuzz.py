@@ -155,14 +155,15 @@ def make_trace(seed: int, sampled: bool) -> Trace:
 
 def run_trace(model, params, trace: Trace, kv: str,
               spec: SpecParams | None = None,
-              draft=None, kernel_plan=None, mesh=None) -> list[list[int]]:
+              draft=None, kernel_plan=None, mesh=None,
+              prefill_mode="chunked", slots=SLOTS) -> list[list[int]]:
     spec_kw = {}
     if spec is not None:
         spec_kw = dict(spec=spec, spec_k_max=SPEC_K_MAX)
         if draft is not None:
             spec_kw.update(draft_model=draft[0], draft_params=draft[1])
-    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
-                        chunk=CHUNK, prefill_mode="chunked",
+    eng = ServingEngine(model, params, slots=slots, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode=prefill_mode,
                         replan_every=10_000, eos_id=trace.eos_id, kv=kv,
                         kv_block_size=BLOCK if kv == "paged" else None,
                         kv_pool_blocks=trace.pool_blocks
@@ -646,3 +647,219 @@ class _FakeMesh:
     def __init__(self, shards):
         self.shape = {"model": shards}
         self.axis_names = ("model",)
+
+
+# -- the cache-family tier: sliding-window ring + SSM/hybrid state ------------
+#
+# Three more dataflow shapes through the same trace runner.  A sliding-
+# window engine keeps per-request KV O(window): dense it masks history, and
+# ``kv="paged"`` runs the wraparound *ring* pool (window-sized block tables,
+# in-place reuse).  SSM and hybrid engines carry constant-size recurrent
+# state and serve through chunked prefill via the masked SSD chunk update.
+# The oracles: ring == dense-sliding bit for bit on traces whose contexts
+# run past the window; sliding == *full attention* while context <= window
+# (same key(0) params — the window mask is inert until it slides); and a
+# constant-state batch == each request decoded solo == a one-shot batched
+# prefill, so bystander masking and per-row stop lengths provably never
+# perturb another row's state.
+
+WINDOW = 16  # tokens: 2 ring blocks of BLOCK=8; traces run past it (MAX_LEN=32)
+
+SWA_CFG = dataclasses.replace(CFG, name="fuzz-swa", sliding_window=WINDOW)
+#: constant-state configs — ``ssm_chunk`` must equal the serving CHUNK: the
+#: chunked==one-shot bitwise oracle holds when each serving chunk is exactly
+#: one SSD chunk (ssm_inner = 2*d_model = 128 → 8 heads of 16)
+SSM_CFG = dataclasses.replace(CFG, name="fuzz-ssm", family="ssm",
+                              ssm_state=8, ssm_head_dim=16, ssm_chunk=CHUNK)
+HYBRID_CFG = dataclasses.replace(SSM_CFG, name="fuzz-hybrid",
+                                 family="hybrid", sliding_window=WINDOW)
+
+#: per-family trace counts: each trace replays against per-request solo
+#: oracles, so the sweep stays a notch smaller than the dense tier
+N_FAMILY = max(N_GREEDY // 7, 2)
+
+
+@pytest.fixture(scope="module")
+def swa_model():
+    m = Model(SWA_CFG)
+    return m, m.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def ssm_model():
+    m = Model(SSM_CFG)
+    return m, m.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def hybrid_model():
+    m = Model(HYBRID_CFG)
+    return m, m.init(jax.random.key(0))
+
+
+@pytest.mark.parametrize("sampled", [False, True])
+@pytest.mark.parametrize("seed", range(40_000, 40_000 + N_FAMILY))
+def test_sliding_ring_trace_equivalence(swa_model, seed, sampled):
+    """Ring-paged sliding engine == dense sliding engine, bit for bit, on
+    traces whose contexts run past the window (prompts up to 20 tokens
+    plus decode vs window 16) — arrival gaps, priorities/preemption,
+    block-gated admission and EOS all included, pool invariants
+    re-derived every tick."""
+    model, params = swa_model
+    trace = make_trace(seed, sampled=sampled)
+    dense = run_trace(model, params, trace, "dense")
+    ring = run_trace(model, params, trace, "paged")
+    assert ring == dense, (
+        f"ring/dense sliding divergence: dense={dense} ring={ring}")
+
+
+def _within_window_trace(seed: int) -> Trace:
+    """Every request keeps prompt + max_new <= WINDOW, so a sliding layer
+    sees exactly the history a full layer sees."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for _ in range(4):
+        prompt = rng.integers(0, CFG.vocab,
+                              int(rng.integers(1, WINDOW - 4))).astype(np.int32)
+        max_new = int(rng.integers(1, WINDOW + 1 - len(prompt)))
+        events.append(TraceEvent(gap=int(rng.integers(0, 3)), prompt=prompt,
+                                 max_new=max_new, priority=0, sampling=None))
+    return Trace(events=events, eos_id=-1,
+                 pool_blocks=SLOTS * MAX_LEN // BLOCK)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_sliding_matches_full_attention_within_window(fuzz_model, swa_model,
+                                                      seed):
+    """The ISSUE's lockdown oracle: while context <= window the sliding
+    engine's logits are the full-attention engine's logits — same key(0)
+    params, so the streams must match bit for bit, dense and ring."""
+    full_m, full_p = fuzz_model
+    swa_m, swa_p = swa_model
+    trace = _within_window_trace(seed)
+    full = run_trace(full_m, full_p, trace, "dense")
+    assert run_trace(swa_m, swa_p, trace, "dense") == full, (
+        "dense sliding diverged from full attention inside the window")
+    assert run_trace(swa_m, swa_p, trace, "paged") == full, (
+        "ring-paged sliding diverged from full attention inside the window")
+
+
+def test_sliding_preemption_restore_across_slid_window(swa_model):
+    """A sliding request preempted *after its ring has wrapped* (context
+    20 > window 16, then a few decodes) restores by re-prefilling its
+    folded context into a fresh window-sized lease: the restored stream
+    still equals an unpreempted solo run, and ring still equals dense."""
+    model, params = swa_model
+    rng = np.random.default_rng(33)
+    prompt = rng.integers(0, CFG.vocab, WINDOW + 4).astype(np.int32)
+    vip_prompt = rng.integers(0, CFG.vocab, 6).astype(np.int32)
+    outs = {}
+    for kv in ("dense", "paged"):
+        eng = ServingEngine(model, params, slots=1, max_len=MAX_LEN,
+                            chunk=CHUNK, prefill_mode="chunked",
+                            replan_every=10_000, kv=kv,
+                            kv_block_size=BLOCK if kv == "paged" else None,
+                            kv_pool_blocks=8 if kv == "paged" else None)
+        eng.scheduler.cfg.preempt = 1  # a 1-slot engine defaults to 0
+        low = Request(rid=0, prompt=prompt.copy(), max_new_tokens=8)
+        eng.submit(low)
+        for _ in range(8):  # 5 prefill ticks (20 @ chunk 4) + decode: slid
+            eng.step()
+        assert len(low.generated) >= 1 and not low.done
+        vip = Request(rid=1, prompt=vip_prompt.copy(), max_new_tokens=2,
+                      priority=5)
+        eng.submit(vip)
+        eng.run()
+        assert eng.scheduler.preempted == 1
+        assert low.done and len(low.generated) == 8 and vip.done
+        if eng.pool is not None:
+            eng.pool.check_invariants()
+            assert eng.pool.stats()["blocks_in_use"] == 0
+        outs[kv] = [list(low.generated), list(vip.generated)]
+    assert outs["dense"] == outs["paged"]
+    solo = Request(rid=0, prompt=prompt.copy(), max_new_tokens=8)
+    eng = ServingEngine(model, params, slots=1, max_len=MAX_LEN, chunk=CHUNK,
+                        prefill_mode="chunked", replan_every=10_000)
+    eng.submit(solo)
+    eng.run()
+    assert list(solo.generated) == outs["dense"][0]
+
+
+def test_ring_pool_is_window_sized(swa_model):
+    """O(window), not O(seq): a request whose horizon (20 + 8 = 28) runs
+    past the window leases exactly window // block_size blocks, the
+    engine reports the ring width, and past-window requests are admitted
+    (the classic paged pool would reject them at submit)."""
+    model, params = swa_model
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked", kv="paged",
+                        kv_block_size=BLOCK)
+    assert eng.stats()["kv_window"] == WINDOW
+    rng = np.random.default_rng(5)
+    req = Request(rid=0, prompt=rng.integers(0, CFG.vocab, 20)
+                  .astype(np.int32), max_new_tokens=8)
+    eng.submit(req)  # horizon 28 > window 16: a ring engine accepts this
+    eng.step()
+    assert eng.pool.stats()["blocks_in_use"] == WINDOW // BLOCK
+    eng.run()
+    assert req.done and len(req.generated) == 8
+    assert eng.pool.stats()["blocks_in_use"] == 0
+
+
+@pytest.mark.parametrize("family_fixture", ["ssm_model", "hybrid_model"])
+@pytest.mark.parametrize("sampled", [False, True])
+@pytest.mark.parametrize("seed", range(50_000, 50_000 + N_FAMILY))
+def test_constant_state_trace_equivalence(request, family_fixture, seed,
+                                          sampled):
+    """SSM/hybrid continuous batching == solo decode, bit for bit: each
+    request of a fuzzed trace (gaps, priorities, preemption, EOS) replays
+    alone in a 1-slot engine and must emit the same stream — the masked
+    SSD chunk update provably never perturbs a bystander row's state."""
+    model, params = request.getfixturevalue(family_fixture)
+    trace = make_trace(seed, sampled=sampled)
+    batched = run_trace(model, params, trace, "dense")
+    for rid, ev in enumerate(trace.events):
+        solo_trace = Trace(events=[dataclasses.replace(ev, gap=0,
+                                                       priority=0)],
+                           eos_id=trace.eos_id, pool_blocks=trace.pool_blocks)
+        solo = run_trace(model, params, solo_trace, "dense", slots=1)
+        assert solo[0] == batched[rid], (
+            f"{family_fixture} rid {rid}: batched={batched[rid]} "
+            f"solo={solo[0]}")
+
+
+@pytest.mark.parametrize("family_fixture", ["ssm_model", "hybrid_model"])
+def test_constant_state_chunked_prefill_matches_batched(request,
+                                                        family_fixture):
+    """Chunked SSD prefill == one-shot batched prefill, bit for bit: the
+    masked chunk update is the padded one-shot scan computed piecewise
+    (serving chunk == ssm_chunk), so splitting a prompt across ticks
+    changes nothing downstream."""
+    model, params = request.getfixturevalue(family_fixture)
+    for seed in (60_001, 60_002):
+        trace = make_trace(seed, sampled=False)
+        chunked = run_trace(model, params, trace, "dense")
+        batched = run_trace(model, params, trace, "dense",
+                            prefill_mode="batched")
+        assert batched == chunked, (
+            f"{family_fixture} seed {seed}: chunked={chunked} "
+            f"one-shot={batched}")
+
+
+def test_spec_rejected_for_non_full_families(swa_model, ssm_model):
+    """The satellite guard, both paths: an engine-wide spec policy on a
+    sliding/SSM model fails at construction, and a spec-carrying
+    *request* on a plain engine fails at submit() with an error naming
+    its rid — not a deep crash ticks later."""
+    for model, params in (swa_model, ssm_model):
+        with pytest.raises(ValueError, match="speculative decoding"):
+            ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                          chunk=CHUNK, prefill_mode="chunked",
+                          spec=SpecParams(mode="ngram", k=2))
+        eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                            chunk=CHUNK, prefill_mode="chunked")
+        req = Request(rid=7, prompt=np.arange(4, dtype=np.int32),
+                      max_new_tokens=2, spec=SpecParams(mode="ngram", k=2))
+        with pytest.raises(ValueError,
+                           match="request 7: speculative decoding"):
+            eng.submit(req)

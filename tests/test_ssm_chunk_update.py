@@ -1,0 +1,107 @@
+"""Masked SSD chunk update (``ssm.mamba2_chunk_update``): the serving
+path for constant-state layers.  One serving chunk == one SSD chunk, so
+running a prompt through successive chunk updates must reproduce the
+one-shot ``mamba2_block`` scan bit for bit — including ragged per-row
+stop lengths (``n_new``) and bystander rows whose cache bits must not
+move at all.  No hypothesis dependency: this file runs everywhere."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as S
+from repro.models.layers import init_params
+
+CFG = ModelConfig(name="ssm-unit", family="ssm", n_layers=1, d_model=32,
+                  vocab=64, n_heads=0, n_kv_heads=0, d_ff=0,
+                  ssm_state=8, ssm_head_dim=16, ssm_conv=4, ssm_chunk=4,
+                  dtype="float32", param_dtype="float32")
+C = CFG.ssm_chunk
+
+
+def _setup(batch, seed=0):
+    p = init_params(S.mamba2_specs(CFG), jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(batch, 3 * C, CFG.d_model)) * 0.3,
+                    jnp.float32)
+    return p, x
+
+
+def _run_chunks(p, x, n_new_per_chunk):
+    """Feed x chunk by chunk with the given (B,) n_new per chunk."""
+    cache = S.init_ssm_cache(x.shape[0], CFG)
+    ys = []
+    for i, n_new in enumerate(n_new_per_chunk):
+        y, cache = S.mamba2_chunk_update(
+            p, x[:, i * C:(i + 1) * C], cache, cfg=CFG,
+            n_new=jnp.asarray(n_new, jnp.int32))
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), cache
+
+
+def test_full_rows_match_one_shot_bitwise():
+    """Every row advancing a full chunk each tick: the piecewise scan is
+    literally the one-shot scan computed in the same chunk partition."""
+    p, x = _setup(batch=2)
+    y_ref, st_ref = S.mamba2_block(p, x, cfg=CFG, return_state=True)
+    y, cache = _run_chunks(p, x, [[C, C]] * 3)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+    np.testing.assert_array_equal(np.asarray(cache.state),
+                                  np.asarray(st_ref))
+    # the conv register holds the last K-1 inputs — decode continues from
+    # it, so it must match a fresh chunk update primed with the full tail
+    assert cache.conv.shape == (2, CFG.ssm_conv - 1,
+                                CFG.ssm_inner + 2 * CFG.ssm_state)
+
+
+def test_ragged_rows_match_solo_one_shot():
+    """Per-row stop lengths: row 0 takes 4+4+2 tokens, row 1 takes 4+1+0.
+    Each row's outputs and final state must equal a solo (B=1) one-shot
+    scan over exactly its own prefix — the masked tail and the bystander
+    tick are provably inert."""
+    p, x = _setup(batch=2, seed=3)
+    plan = [[C, C], [C, 1], [2, 0]]
+    y, cache = _run_chunks(p, x, plan)
+    for row, total in ((0, 10), (1, 5)):
+        xr = x[row:row + 1, :total]
+        y_ref, st_ref = S.mamba2_block(p, xr, cfg=CFG, return_state=True)
+        got = []
+        pos = 0
+        for i, n in enumerate([pl[row] for pl in plan]):
+            got.append(y[row:row + 1, i * C:i * C + n])
+            pos += n
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(got, axis=1)), np.asarray(y_ref))
+        np.testing.assert_array_equal(np.asarray(cache.state[row]),
+                                      np.asarray(st_ref[0]))
+
+
+def test_bystander_row_cache_bits_never_move():
+    """A row at n_new=0 (decode-phase bystander sharing the prefill
+    dispatch) keeps its recurrent state and conv register bit-identical —
+    the explicit row-mask write-back, not approximate neutrality."""
+    p, x = _setup(batch=2, seed=5)
+    _, cache = _run_chunks(p, x, [[C, C]])
+    before = jax.tree.map(np.asarray, cache)
+    _, after = S.mamba2_chunk_update(
+        p, x[:, C:2 * C], cache, cfg=CFG,
+        n_new=jnp.asarray([C, 0], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(after.state[1]),
+                                  before.state[1])
+    np.testing.assert_array_equal(np.asarray(after.conv[1]), before.conv[1])
+    # while the advancing row really advanced
+    assert not np.array_equal(np.asarray(after.state[0]), before.state[0])
+
+
+def test_short_prompt_conv_register_left_pads():
+    """A context shorter than the conv register (< K-1 tokens) must leave
+    the register's leading slots at the causal conv's zero padding — the
+    regression behind the one-shot prefill fix in models/model.py."""
+    p, x = _setup(batch=1, seed=9)
+    cache = S.init_ssm_cache(1, CFG)
+    _, cache = S.mamba2_chunk_update(p, x[:, :C], cache, cfg=CFG,
+                                     n_new=jnp.asarray([2], jnp.int32))
+    k1 = CFG.ssm_conv - 1  # 3 slots, 2 tokens seen: slot 0 still zero
+    assert np.all(np.asarray(cache.conv[0, 0]) == 0)
+    assert not np.all(np.asarray(cache.conv[0, 1:]) == 0)
+    assert cache.conv.shape[1] == k1
