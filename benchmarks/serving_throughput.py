@@ -83,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, get_config
+from repro.models import cache_family as CF
 from repro.models.model import Model
 from repro.serving import (ReplicaRouter, Request, SamplingParams,
                            ServingEngine, SpecParams, settle_ticks)
@@ -464,15 +465,22 @@ FAMILY_MAX_LEN = 128
 FAMILY_SLOTS = 2
 FAMILY_REQUESTS = 4
 
-FAMILY_ROWS = ("full", "sliding", "ssm", "hybrid")
+FAMILY_ROWS = ("full", "sliding", "mixed", "ssm", "hybrid")
 
 
 def _family_setup(row: str):
-    if row in ("full", "sliding"):
+    if row in ("full", "sliding", "mixed"):
         cfg = get_config(ARCH).reduced()
         if row == "sliding":
             cfg = dataclasses.replace(cfg, name=cfg.name + "-swa",
                                       sliding_window=FAMILY_WINDOW)
+        elif row == "mixed":
+            # the heterogeneous stack: same arch, alternating sliding and
+            # global layers (gemma3-style) — its long-chat KV must land
+            # strictly between the all-sliding and all-full rows
+            cfg = dataclasses.replace(cfg, name=cfg.name + "-mixed",
+                                      sliding_window=FAMILY_WINDOW,
+                                      layer_pattern="SG")
         kw = dict(kv="paged", kv_block_size=KV_BLOCK)
     elif row == "ssm":
         cfg = get_config("mamba2-370m").reduced()
@@ -516,9 +524,23 @@ def _family_serve(cfg, model, params, kw) -> tuple[float, dict, int]:
             if eng.pool is not None:
                 ps = eng.pool.stats()
                 live = max(ps["live_requests"], 1)
-                per_block = (2 * eng.pool.cfg.block_size * cfg.n_kv_heads
-                             * cfg.resolved_head_dim * 4 * cfg.n_layers)
-                kv_bytes = ps["blocks_in_use"] * per_block // live
+                per_block_layer = (2 * eng.pool.cfg.block_size
+                                   * cfg.n_kv_heads
+                                   * cfg.resolved_head_dim * 4)
+                if ps.get("kind") == "mixed":
+                    # per-kind accounting: the classic lease backs only
+                    # the global layers, the ring lease only the sliding
+                    # ones — multiplying either count by n_layers would
+                    # double-book the other kind's layers
+                    fams = CF.layer_cache_families(cfg)
+                    n_slide = sum(f.kv == "sliding" for f in fams)
+                    kv_bytes = (ps["classic"]["blocks_in_use"]
+                                * (len(fams) - n_slide)
+                                + ps["ring"]["blocks_in_use"] * n_slide) \
+                        * per_block_layer // live
+                else:
+                    kv_bytes = (ps["blocks_in_use"] * per_block_layer
+                                * cfg.n_layers // live)
             else:
                 kv_bytes = _state_bytes(cfg)
                 if cfg.family == "hybrid":
@@ -557,8 +579,23 @@ def run_families() -> None:
     by = {r["row"]: r for r in rows}
     ratio = (by["full"]["kv_bytes_held_per_request"]
              / max(by["sliding"]["kv_bytes_held_per_request"], 1))
+    # the heterogeneous stack's claim, measured not asserted-by-hand: a
+    # mixed lease (full-horizon classic blocks on the global layers, a
+    # window-sized ring on the sliding ones) holds strictly less KV than
+    # the all-full stack and strictly more than the all-sliding one
+    assert (by["sliding"]["kv_bytes_held_per_request"]
+            < by["mixed"]["kv_bytes_held_per_request"]
+            < by["full"]["kv_bytes_held_per_request"]), (
+        "mixed-stack KV footprint did not land between sliding and full: "
+        f"{by['sliding']['kv_bytes_held_per_request']} vs "
+        f"{by['mixed']['kv_bytes_held_per_request']} vs "
+        f"{by['full']['kv_bytes_held_per_request']}")
     emit("serving.family.takeaways", 0.0,
          f"sliding_kv_saving_vs_full={ratio:.2f}x;"
+         f"mixed_kv_between_sliding_and_full="
+         f"{by['sliding']['kv_bytes_held_per_request']}<"
+         f"{by['mixed']['kv_bytes_held_per_request']}<"
+         f"{by['full']['kv_bytes_held_per_request']};"
          f"window={FAMILY_WINDOW};prompt={FAMILY_PROMPT};"
          f"ssm_kv_growth={by['ssm']['kv_growth']};"
          f"hybrid_kv_growth={by['hybrid']['kv_growth']}")

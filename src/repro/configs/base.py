@@ -28,6 +28,16 @@ class ModelConfig:
     rope_fraction: float = 1.0     # chatglm3 "RoPE 2d": rotary on half the dims
     rope_theta: float = 10000.0
     sliding_window: int = 0        # 0 = full attention; >0 enables long_500k
+    #: per-layer cache pattern for heterogeneous attention stacks, repeated
+    #: over n_layers: 'S' = sliding-window layer (needs sliding_window > 0),
+    #: 'G' = global full-attention layer.  "" = homogeneous (every layer
+    #: derives its family from `family`/`sliding_window` as before).
+    layer_pattern: str = ""
+    #: gemma3-style per-kind RoPE wavelengths for pattern stacks: sliding
+    #: ('S') layers rotate with the local theta, global ('G') layers with
+    #: the global theta.  0 = fall back to `rope_theta` for that kind.
+    rope_theta_local: float = 0.0
+    rope_theta_global: float = 0.0
     max_len: int = 0               # serving-horizon hint (0 = unbounded);
                                    # reduced() clamps sliding_window to it
     logit_softcap: float = 0.0
@@ -103,9 +113,19 @@ class ModelConfig:
 
     @property
     def sub_quadratic(self) -> bool:
-        """Can this config decode with O(1)/O(window) memory per token?"""
-        return self.family in ("ssm",) or self.sliding_window > 0 \
-            or (self.family == "hybrid" and self.sliding_window > 0)
+        """Can this config decode with O(1)/O(window) memory per token?
+
+        Derived from the per-layer cache descriptors: true iff no layer
+        holds a full (linearly growing) KV cache.  A hybrid with
+        ``sliding_window == 0`` has SSM state *and* full-attention KV, so
+        its decode memory still grows with context — the old predicate's
+        ``family == "hybrid" and sliding_window > 0`` clause was
+        unreachable (subsumed by ``sliding_window > 0``) and invited
+        reading hybrids as sub-quadratic unconditionally.  A mixed
+        sliding+global pattern stack likewise stays linear: its global
+        layers grow."""
+        from repro.models import cache_family as CF
+        return all(f.kv != "full" for f in CF.layer_cache_families(self))
 
     def padded_vocab(self, multiple: int = 256) -> int:
         return -(-self.vocab // multiple) * multiple
@@ -148,6 +168,12 @@ class ModelConfig:
         max_len = min(self.max_len, 128) if self.max_len else 128
         window = min(self.sliding_window, 64, max_len) \
             if self.sliding_window else 0
+        # a 2-layer smoke stack must keep every layer *kind* of a pattern
+        # config: compress the pattern to its distinct kinds in order of
+        # first appearance ("SSSSSG" -> "SG"), so the reduced stack still
+        # mixes sliding and global layers instead of truncating to all-S
+        pattern = "".join(dict.fromkeys(self.layer_pattern)) \
+            if self.layer_pattern else ""
         return dataclasses.replace(
             self,
             name=self.name + "-smoke",
@@ -165,6 +191,7 @@ class ModelConfig:
             ssm_head_dim=32 if self.ssm_state else 64,
             ssm_chunk=16,
             sliding_window=window,
+            layer_pattern=pattern,
             max_len=max_len,
             dtype="float32",
             param_dtype="float32",
@@ -222,6 +249,6 @@ def all_configs() -> dict[str, ModelConfig]:
 
 
 def _load_all() -> None:
-    from . import (arctic_480b, chameleon_34b, chatglm3_6b, granite_8b,  # noqa: F401
-                   hymba_1_5b, internlm2_20b, mamba2_370m, olmoe_1b_7b,
-                   qwen3_1_7b, seamless_m4t_large_v2)
+    from . import (arctic_480b, chameleon_34b, chatglm3_6b, gemma3_1b,  # noqa: F401
+                   granite_8b, hymba_1_5b, internlm2_20b, mamba2_370m,
+                   olmoe_1b_7b, qwen3_1_7b, seamless_m4t_large_v2)

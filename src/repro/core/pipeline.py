@@ -611,7 +611,7 @@ SERVE_KV_BLOCK_SIZES: tuple[int, ...] = (8, 16, 32)
 
 def _plan_kv_pool(slots: int, max_len: int, chunk: int,
                   avg_prompt: float, shards: int = 1,
-                  window: int = 0) -> dict[str, Any]:
+                  window: int = 0, mixed: bool = False) -> dict[str, Any]:
     """Size the paged KV pool from the prompt-length distribution.
 
     * ``kv_block_size`` — largest candidate dividing the horizon (the
@@ -634,10 +634,16 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
       holds a fixed window-sized lease whose blocks are rewritten in
       place as the window slides, so admission prices O(window) blocks
       however long the chat runs.
+    * ``mixed`` — heterogeneous stack (sliding *and* global layers): the
+      main geometry is the classic pool for the global layers (horizon =
+      ``max_len``), plus a separate ``kv_ring_blocks`` ring capacity for
+      the sliding layers; the shared block size must tile both spans.
     """
-    horizon = min(window, max_len) if window else max_len
+    w = min(window, max_len) if window else 0
+    horizon = max_len if mixed else (w or max_len)
     fallback = False
-    divisors = [b for b in SERVE_KV_BLOCK_SIZES if horizon % b == 0]
+    divisors = [b for b in SERVE_KV_BLOCK_SIZES if horizon % b == 0
+                and (not mixed or w % b == 0)]
     if not divisors:
         # no preferred size tiles this horizon: fall back to the largest
         # power-of-two divisor (>=1 always exists), so planned defaults
@@ -647,13 +653,14 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
         # surfaced in the plan and the PassReport instead of silently
         # shipping a degraded geometry
         fallback = True
-        divisors = [next(b for b in (4, 2, 1) if horizon % b == 0)]
+        divisors = [next(b for b in (4, 2, 1)
+                         if horizon % b == 0 and (not mixed or w % b == 0))]
     target = avg_prompt / 2 if avg_prompt > 0 else float(chunk)
     target *= max(int(shards), 1)
     fitting = [b for b in divisors if b <= max(target, divisors[0])]
     bs = max(fitting) if fitting else divisors[0]
     per_seq = -(-horizon // bs)
-    if window:
+    if window and not mixed:
         # ring leases are fixed at window size: prompt stats can never
         # shrink them (the window is full whenever context >= window)
         pool_blocks = slots * per_seq
@@ -671,7 +678,10 @@ def _plan_kv_pool(slots: int, max_len: int, chunk: int,
         "kv_saving": round(max(0.0, 1.0 - pool_blocks * bs
                                 / (slots * max_len)), 4),
     }
-    if window:
+    if mixed:
+        out["kv_window"] = w
+        out["kv_ring_blocks"] = slots * (w // bs)
+    elif window:
         out["kv_window"] = horizon
     if fallback:
         out["kv_block_fallback"] = True
@@ -745,6 +755,11 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
         (0 = full attention): the paged pool runs in ring mode and its
         geometry tiles the *window*, not ``max_len`` — admission prices
         O(window) blocks per request;
+      * ``kv_mixed`` — heterogeneous (layer-pattern) stack mixing sliding
+        and global layers: ``kv_growth`` reads ``"mixed"`` and a paged
+        plan carries both the classic geometry (global layers, horizon =
+        ``max_len``) and ``kv_ring_blocks`` (sliding layers, window-sized
+        leases);
       * ``constant_state`` — the family carries recurrent (SSM/hybrid)
         state: per-request decode state is O(1) in context, surfaced as
         ``kv_growth: "constant"`` in the plan;
@@ -776,6 +791,7 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     ratio = float(o.get("chunk_ratio", 4.0))
     shards = int(o.get("mesh_shards", 1))
     window = int(o.get("sliding_window", 0))
+    mixed = bool(o.get("kv_mixed", False))
     constant_state = bool(o.get("constant_state", False))
 
     if decode_s > 0.0 and prefill_tok_s > 0.0:
@@ -847,13 +863,17 @@ def _serve_schedule_fn(g: Graph, ctx: PassContext) -> Graph:
     # how per-request KV grows with context — the dataflow shape the cache
     # family gives the serving plan: "linear" (full attention, O(seq)),
     # "window" (sliding, O(window)), "constant" (SSM/hybrid recurrent
-    # state; a hybrid's sliding attention layers are window-bounded too)
+    # state; a hybrid's sliding attention layers are window-bounded too),
+    # "mixed" (layer-pattern stack: sliding layers window-bounded, global
+    # layers linear — total growth is linear with a per-token slope of
+    # only the global layer count)
     plan["kv_growth"] = ("constant" if constant_state
+                         else "mixed" if mixed
                          else "window" if window else "linear")
     if kv == "paged":
         plan["kv"] = kv
         plan.update(_plan_kv_pool(slots, max_len, chunk, avg_prompt,
-                                  shards, window))
+                                  shards, window, mixed))
     # the serving engine resolves a KernelPlan once (kernel_select pass)
     # and hands it back through every replan: echoing it into the serve
     # plan keeps the per-site backend choice visible in stats()/reports

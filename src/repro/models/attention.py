@@ -427,13 +427,23 @@ def _gather_heads(out: jax.Array, shard_axis: str | None,
 def attention_block(p: dict[str, jax.Array], x: jax.Array, *,
                     cfg, causal: bool = True, positions: jax.Array | None = None,
                     kv: tuple[jax.Array, jax.Array] | None = None,
-                    use_chunked: bool | None = None) -> jax.Array:
+                    use_chunked: bool | None = None,
+                    window: int | None = None,
+                    rope_theta: float | None = None) -> jax.Array:
     """Training/prefill attention over a whole sequence.
 
     x: (B,S,d).  ``kv`` overrides K/V inputs (cross-attention).
+    ``window``/``rope_theta`` override the config's stack-wide values for
+    one layer of a heterogeneous (layer-pattern) stack; None keeps the
+    homogeneous behavior.  Both are static Python values — the masks
+    branch on them at trace time.
     """
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
+    if window is None:
+        window = cfg.sliding_window
+    if rope_theta is None:
+        rope_theta = cfg.rope_theta
     q = _project(p, x, "wq")
     if kv is None:
         k = _project(p, x, "wk")
@@ -446,17 +456,17 @@ def attention_block(p: dict[str, jax.Array], x: jax.Array, *,
     if positions is None:
         positions = jnp.arange(S)[None, :]
     if kv is None and cfg.rope_fraction > 0:
-        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        inv = rope_frequencies(hd, cfg.rope_fraction, rope_theta)
         q = apply_rope(q, positions, inv)
         k = apply_rope(k, positions, inv)
     if use_chunked is None:
         use_chunked = S > 2048
     if use_chunked and kv is None:
         out = chunked_attention(q, k, v, causal=causal,
-                                window=cfg.sliding_window)
+                                window=window)
     else:
         out = full_attention(q, k, v, causal=causal and kv is None,
-                             window=cfg.sliding_window if kv is None else 0)
+                             window=window if kv is None else 0)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
 
 
@@ -467,7 +477,9 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
                            paged_backend: str = "gather",
                            ring_backend: str = "gather",
                            live: jax.Array | None = None,
-                           shard_axis: str | None = None
+                           shard_axis: str | None = None,
+                           window: int | None = None,
+                           rope_theta: float | None = None
                            ) -> tuple[jax.Array, KVCache]:
     """One decode step.  x: (B, 1, d).  Updates the ring-buffer (or paged)
     cache.
@@ -488,9 +500,17 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
     rows' pool writes are dropped and their lengths frozen (the dense path
     lets the caller restore old rows wholesale instead — a paged pool is
     shared across rows, so the mask must act at the scatter).
+
+    ``window``/``rope_theta`` override the config for one layer of a
+    heterogeneous stack (static trace-time values); None keeps the
+    stack-wide ``cfg.sliding_window``/``cfg.rope_theta``.
     """
     B, _, _ = x.shape
     hd = cfg.resolved_head_dim
+    if window is None:
+        window = cfg.sliding_window
+    if rope_theta is None:
+        rope_theta = cfg.rope_theta
     pos = cache.length  # (B,) position of the new token
 
     q = _project(p, x, "wq")[:, 0]            # (B, H, D)
@@ -510,7 +530,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
         q = rms_norm(q, p["q_norm"])
         k_new = rms_norm(k_new, p["k_norm"])
     if cfg.rope_fraction > 0:
-        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        inv = rope_frequencies(hd, cfg.rope_fraction, rope_theta)
         q = apply_rope(q[:, None], pos[:, None], inv)[:, 0]
         k_new = apply_rope(k_new[:, None], pos[:, None], inv)[:, 0]
 
@@ -523,7 +543,7 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
 
     if isinstance(cache, PagedRingKVCache):
         y, new_cache = _ring_decode_write_attend(
-            q, k_new, v_new, cache, cfg=cfg, live=live,
+            q, k_new, v_new, cache, window=window, live=live,
             dense_backend=dense_backend, backend=ring_backend)
         y = _gather_heads(y, shard_axis, axis=1)
         return jnp.einsum("bhk,hkd->bd", y,
@@ -537,8 +557,8 @@ def attention_decode_block(p: dict[str, jax.Array], x: jax.Array,
     positions = cache.positions.at[bidx, slot].set(pos)
     # valid slots: written, and within the sliding window if one is set
     valid = positions >= 0
-    if cfg.sliding_window:
-        valid &= positions > (pos[:, None] - cfg.sliding_window)
+    if window:
+        valid &= positions > (pos[:, None] - window)
     out = decode_attention(q, k_cache, v_cache, valid, dense_backend)
     out = _gather_heads(out, shard_axis, axis=1)
     new_cache = KVCache(k=k_cache, v=v_cache, positions=positions,
@@ -582,7 +602,7 @@ def _paged_decode_write_attend(q: jax.Array, k_new: jax.Array,
 
 def _ring_decode_write_attend(q: jax.Array, k_new: jax.Array,
                               v_new: jax.Array, cache: PagedRingKVCache, *,
-                              cfg, live: jax.Array | None,
+                              window: int, live: jax.Array | None,
                               dense_backend: str = "xla",
                               backend: str = "gather"
                               ) -> tuple[jax.Array, PagedRingKVCache]:
@@ -621,8 +641,8 @@ def _ring_decode_write_attend(q: jax.Array, k_new: jax.Array,
     new_len = jnp.where(ok, pos + 1, pos).astype(jnp.int32)
     k_cache, v_cache = paged_kv_view(k_pool, v_pool, cache.block_tables)
     valid = positions >= 0
-    if cfg.sliding_window:
-        valid &= positions > (pos[:, None] - cfg.sliding_window)
+    if window:
+        valid &= positions > (pos[:, None] - window)
     out = decode_attention(q, k_cache, v_cache, valid, dense_backend)
     return out, PagedRingKVCache(k=k_pool, v=v_pool,
                                  block_tables=cache.block_tables,
@@ -630,7 +650,9 @@ def _ring_decode_write_attend(q: jax.Array, k_new: jax.Array,
 
 
 def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
-                       *, cfg, lengths: jax.Array | None = None
+                       *, cfg, lengths: jax.Array | None = None,
+                       window: int | None = None,
+                       rope_theta: float | None = None
                        ) -> tuple[jax.Array, KVCache]:
     """Prefill: run full-sequence attention AND populate the cache.
 
@@ -646,6 +668,10 @@ def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
     B, S, _ = x.shape
     hd = cfg.resolved_head_dim
     W = cache.k.shape[1]
+    if window is None:
+        window = cfg.sliding_window
+    if rope_theta is None:
+        rope_theta = cfg.rope_theta
     q = _project(p, x, "wq")
     k = _project(p, x, "wk")
     v = _project(p, x, "wv")
@@ -654,11 +680,11 @@ def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
         k = rms_norm(k, p["k_norm"])
     positions = jnp.arange(S)[None, :]
     if cfg.rope_fraction > 0:
-        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        inv = rope_frequencies(hd, cfg.rope_fraction, rope_theta)
         q = apply_rope(q, positions, inv)
         k = apply_rope(k, positions, inv)
     out = (chunked_attention if S > 2048 else full_attention)(
-        q, k, v, causal=True, window=cfg.sliding_window)
+        q, k, v, causal=True, window=window)
     # write the last min(W, S) positions into the ring buffer at their slots
     take = min(W, S)
     tail_pos = jnp.arange(S - take, S)
@@ -678,13 +704,15 @@ def prefill_into_cache(p: dict[str, jax.Array], x: jax.Array, cache: KVCache,
 
 
 def _chunk_qkv(p: dict[str, jax.Array], x: jax.Array, *, cfg,
-               offsets: jax.Array):
+               offsets: jax.Array, rope_theta: float | None = None):
     """Shared chunk-prefill front half: q/k/v projections, qk-norm and
     RoPE at the rows' absolute positions.  One body for the ring-buffer
     and paged variants — the K/V bits a chunk writes must not depend on
     which cache layout receives them."""
     B, C, _ = x.shape
     hd = cfg.resolved_head_dim
+    if rope_theta is None:
+        rope_theta = cfg.rope_theta
     q = _project(p, x, "wq")                    # (B, C, H, D)
     k_new = _project(p, x, "wk")                # (B, C, K, D)
     v_new = _project(p, x, "wv")
@@ -693,7 +721,7 @@ def _chunk_qkv(p: dict[str, jax.Array], x: jax.Array, *, cfg,
         k_new = rms_norm(k_new, p["k_norm"])
     pos = offsets[:, None] + jnp.arange(C)[None, :]          # (B, C)
     if cfg.rope_fraction > 0:
-        inv = rope_frequencies(hd, cfg.rope_fraction, cfg.rope_theta)
+        inv = rope_frequencies(hd, cfg.rope_fraction, rope_theta)
         q = apply_rope(q, pos, inv)
         k_new = apply_rope(k_new, pos, inv)
     return q, k_new, v_new, pos
@@ -721,7 +749,9 @@ def _chunk_attend(p: dict[str, jax.Array], q: jax.Array, k_cache: jax.Array,
 def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
                              cache: KVCache, *, cfg, offsets: jax.Array,
                              n_new: jax.Array,
-                             shard_axis: str | None = None
+                             shard_axis: str | None = None,
+                             window: int | None = None,
+                             rope_theta: float | None = None
                              ) -> tuple[jax.Array, KVCache]:
     """Chunked prefill: extend the cache by up to C prompt tokens per row.
 
@@ -738,7 +768,10 @@ def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
     """
     B, C, _ = x.shape
     W = cache.k.shape[1]
-    q, k_new, v_new, pos = _chunk_qkv(p, x, cfg=cfg, offsets=offsets)
+    if window is None:
+        window = cfg.sliding_window
+    q, k_new, v_new, pos = _chunk_qkv(p, x, cfg=cfg, offsets=offsets,
+                                      rope_theta=rope_theta)
 
     # masked ring-buffer write: padded/bystander entries write back the old
     # value, so the scatter is a no-op exactly where n_new says it must be
@@ -759,8 +792,8 @@ def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
 
     attend = (positions[:, None, :] >= 0) \
         & (positions[:, None, :] <= pos[:, :, None])         # (B, C, W)
-    if cfg.sliding_window:
-        attend &= positions[:, None, :] > pos[:, :, None] - cfg.sliding_window
+    if window:
+        attend &= positions[:, None, :] > pos[:, :, None] - window
     y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype, shard_axis)
     new_cache = KVCache(k=k_cache, v=v_cache, positions=positions,
                         length=length)
@@ -770,7 +803,9 @@ def prefill_chunk_into_cache(p: dict[str, jax.Array], x: jax.Array,
 def prefill_chunk_into_paged_cache(p: dict[str, jax.Array], x: jax.Array,
                                    cache: PagedKVCache, *, cfg,
                                    offsets: jax.Array, n_new: jax.Array,
-                                   shard_axis: str | None = None
+                                   shard_axis: str | None = None,
+                                   window: int | None = None,
+                                   rope_theta: float | None = None
                                    ) -> tuple[jax.Array, PagedKVCache]:
     """Chunked prefill against a block-paged cache.
 
@@ -788,7 +823,11 @@ def prefill_chunk_into_paged_cache(p: dict[str, jax.Array], x: jax.Array,
     B, C, _ = x.shape
     P, bs = cache.k.shape[0], cache.k.shape[1]
     M = cache.block_tables.shape[1]
-    q, k_new, v_new, pos = _chunk_qkv(p, x, cfg=cfg, offsets=offsets)
+    if window:
+        raise ValueError("classic paged chunks attend the full context; "
+                         "sliding layers take the ring variant")
+    q, k_new, v_new, pos = _chunk_qkv(p, x, cfg=cfg, offsets=offsets,
+                                      rope_theta=rope_theta)
 
     # block-table scatter: (row, chunk position) -> (physical block, offset)
     valid_new = jnp.arange(C)[None, :] < n_new[:, None]      # (B, C)
@@ -820,7 +859,9 @@ def prefill_chunk_into_paged_cache(p: dict[str, jax.Array], x: jax.Array,
 def prefill_chunk_into_ring_cache(p: dict[str, jax.Array], x: jax.Array,
                                   cache: PagedRingKVCache, *, cfg,
                                   offsets: jax.Array, n_new: jax.Array,
-                                  shard_axis: str | None = None
+                                  shard_axis: str | None = None,
+                                  window: int | None = None,
+                                  rope_theta: float | None = None
                                   ) -> tuple[jax.Array, PagedRingKVCache]:
     """Chunked prefill against the wraparound ring pool.
 
@@ -836,7 +877,10 @@ def prefill_chunk_into_ring_cache(p: dict[str, jax.Array], x: jax.Array,
     P, bs = cache.k.shape[0], cache.k.shape[1]
     M = cache.block_tables.shape[1]
     W = M * bs
-    q, k_new, v_new, pos = _chunk_qkv(p, x, cfg=cfg, offsets=offsets)
+    if window is None:
+        window = cfg.sliding_window
+    q, k_new, v_new, pos = _chunk_qkv(p, x, cfg=cfg, offsets=offsets,
+                                      rope_theta=rope_theta)
 
     valid_new = jnp.arange(C)[None, :] < n_new[:, None]      # (B, C)
     slot = (pos % W).astype(jnp.int32)
@@ -859,8 +903,8 @@ def prefill_chunk_into_ring_cache(p: dict[str, jax.Array], x: jax.Array,
     k_cache, v_cache = paged_kv_view(k_pool, v_pool, cache.block_tables)
     attend = (positions[:, None, :] >= 0) \
         & (positions[:, None, :] <= pos[:, :, None])         # (B, C, W)
-    if cfg.sliding_window:
-        attend &= positions[:, None, :] > pos[:, :, None] - cfg.sliding_window
+    if window:
+        attend &= positions[:, None, :] > pos[:, :, None] - window
     y = _chunk_attend(p, q, k_cache, v_cache, attend, x.dtype, shard_axis)
     new_cache = PagedRingKVCache(k=k_pool, v=v_pool,
                                  block_tables=cache.block_tables,

@@ -52,6 +52,16 @@ class Model:
         self.dtype = _DTYPES[cfg.dtype]
         self.param_dtype = _DTYPES[cfg.param_dtype]
         self.opt_cfg = opt_cfg or AdamWConfig(moment_dtype=cfg.opt_dtype)
+        #: per-layer cache dataflow: a layer-pattern config takes the
+        #: heterogeneous path — caches become a *tuple* of per-layer
+        #: LayerCaches (leaves may differ in width/pool across layers) and
+        #: every stack loop unrolls with static per-layer window/RoPE-theta
+        #: arguments.  Homogeneous configs keep the stacked-leaf layout and
+        #: the scan path bit-for-bit.
+        self.families = CF.layer_cache_families(cfg)
+        self.layer_windows = CF.layer_windows(cfg)
+        self.layer_thetas = CF.layer_rope_thetas(cfg)
+        self.hetero = bool(getattr(cfg, "layer_pattern", ""))
 
     # ------------------------------------------------------------------ specs
     def param_specs(self):
@@ -173,31 +183,72 @@ class Model:
         return min(w, seq_len)
 
     def init_caches(self, batch: int, seq_len: int, src_len: int = 0):
-        """Stacked per-layer caches (leading layer axis on every leaf)."""
+        """Stacked per-layer caches (leading layer axis on every leaf) — or,
+        for a heterogeneous stack, a tuple of per-layer caches at their
+        *natural* widths: a sliding layer's ring is window-sized, a global
+        layer's buffer spans the horizon.  Differing softmax widths stay
+        bit-identical because masked-out slots contribute exact zero terms
+        (the cross-width property the sliding==full fuzz oracle pins)."""
         cfg = self.cfg
+        if self.hetero:
+            return tuple(
+                T.init_layer_cache(
+                    cfg, batch,
+                    min(w, seq_len) if w else seq_len,
+                    src_len, self.dtype)
+                for w in self.layer_windows)
         width = self.cache_width(seq_len)
         one = T.init_layer_cache(cfg, batch, width, src_len, self.dtype)
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
 
     def init_paged_caches(self, batch: int, *, pool_blocks: int,
-                          block_size: int, max_blocks: int):
+                          block_size: int, max_blocks: int,
+                          ring_pool_blocks: int | None = None,
+                          ring_max_blocks: int | None = None):
         """Block-paged serving caches: one physical pool per layer plus
         per-slot block tables (``repro.serving.kv_pool`` owns allocation).
 
         Dispatches on the per-layer cache families: all-``full`` layers
         get the classic logical-order pool, all-``sliding`` layers get the
         wraparound ring pool (window-sized tables, ``max_blocks`` covering
-        ring slots).  SSM/hybrid state is dense per slot and never pooled.
+        ring slots).  A mixed stack gets *both*, per layer kind — its ring
+        layers take the separate ``ring_pool_blocks``/``ring_max_blocks``
+        geometry (the classic and ring pools have independent block-id
+        spaces, matching ``kv_pool.MixedKVPool``) and the result is a
+        tuple of per-layer caches.  SSM/hybrid state is dense per slot and
+        never pooled.
         """
         cfg = self.cfg
         if not CF.supports_paged(cfg):
             raise NotImplementedError(
                 "paged KV needs attention-only cache families "
                 f"(full or sliding per layer), not {CF.family_label(cfg)}")
+        kind = CF.paged_kind(cfg)
+        if kind == "mixed" and (ring_pool_blocks is None
+                                or ring_max_blocks is None):
+            raise ValueError(
+                "a mixed sliding+global stack needs its ring pool "
+                "geometry (ring_pool_blocks/ring_max_blocks) alongside "
+                "the classic pool's")
+        if self.hetero:
+            # every layer-pattern stack runs the per-layer (unrolled)
+            # path, even when the pattern happens to be homogeneous — a
+            # uniform pattern shares one pool, so its ring geometry
+            # defaults to the main pool's
+            rpb = pool_blocks if ring_pool_blocks is None else ring_pool_blocks
+            rmb = max_blocks if ring_max_blocks is None else ring_max_blocks
+            return tuple(
+                T.init_paged_layer_cache(
+                    cfg, batch,
+                    rpb if f.kv == "sliding" else pool_blocks,
+                    block_size,
+                    rmb if f.kv == "sliding" else max_blocks,
+                    self.dtype,
+                    kind="ring" if f.kv == "sliding" else "paged")
+                for f in self.families)
         one = T.init_paged_layer_cache(cfg, batch, pool_blocks, block_size,
-                                       max_blocks, self.dtype,
-                                       kind=CF.paged_kind(cfg))
+                                       max_blocks, self.dtype, kind=kind)
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), one)
 
@@ -205,8 +256,43 @@ class Model:
     def _is_paged(caches) -> bool:
         """Pool-backed caches (classic paged or ring paged): physical
         blocks are shared across rows, so live masks must act at the
-        scatter rather than by post-hoc row restore."""
+        scatter rather than by post-hoc row restore.  Heterogeneous
+        tuples are paged iff their layers are (the engine never mixes
+        paged and dense layers within one stack)."""
+        if type(caches) is tuple:  # hetero: plain tuple, not the LayerCache
+            caches = caches[0]     # NamedTuple (itself a tuple subclass)
         return isinstance(caches.kv, (A.PagedKVCache, A.PagedRingKVCache))
+
+    def _run_layers(self, body, x, layers, caches):
+        """Run a per-layer body over the stack: the homogeneous path scans
+        (or unrolls) stacked leaves; the heterogeneous path unrolls in
+        Python, slicing the stacked params per layer and passing each
+        layer's static window/RoPE-theta to the body."""
+        cfg = self.cfg
+        if not self.hetero:
+            return T.scan_or_unroll(body, x, (layers, caches),
+                                    cfg.scan_layers)
+        new_caches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, i=i: a[i], layers)
+            x, nc = body(x, (lp, caches[i]),
+                         window=self.layer_windows[i],
+                         rope_theta=self.layer_thetas[i])
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    def _keep_rows(self, new_caches, old_caches, mask):
+        """Restore non-live rows wholesale (dense caches).  Stacked leaves
+        carry a leading layer axis before the batch axis; heterogeneous
+        tuples' leaves are batch-major."""
+        lead = 1 if self.hetero else 2
+
+        def keep(new, old):
+            m = mask.reshape((1,) * (lead - 1) + (mask.shape[0],)
+                             + (1,) * (new.ndim - lead))
+            return jnp.where(m, new, old)
+
+        return jax.tree.map(keep, new_caches, old_caches)
 
     def prefill_step(self, params, batch, batch_axes=(), max_len: int = 0):
         """Run the prompt, return (last-position logits, populated caches).
@@ -239,7 +325,7 @@ class Model:
         x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
         caches = self.init_caches(B, max(max_len, S), src_len)
 
-        def body(carry, inp):
+        def body(carry, inp, window=None, rope_theta=None):
             h = carry
             lp, cache = inp
             fam = cfg.family
@@ -263,7 +349,9 @@ class Model:
                                             conv=_conv_tail(hn, lp, cfg)))
             else:
                 att, kv = A.prefill_into_cache(lp["attn"], hn, cache.kv,
-                                               cfg=cfg, lengths=lengths)
+                                               cfg=cfg, lengths=lengths,
+                                               window=window,
+                                               rope_theta=rope_theta)
                 h = h + att
                 new_cache = new_cache._replace(kv=kv)
             if cfg.is_encoder_decoder:
@@ -286,8 +374,7 @@ class Model:
                 h = h + T.swiglu(lp["mlp"], h2)
             return h, new_cache
 
-        x, new_caches = T.scan_or_unroll(body, x, (params["layers"], caches),
-                                         cfg.scan_layers)
+        x, new_caches = self._run_layers(body, x, params["layers"], caches)
         if lengths is None:
             x = x[:, -1:]
         else:  # per-row last valid prompt position of the padded batch
@@ -320,16 +407,19 @@ class Model:
             raise NotImplementedError(
                 f"chunked prefill needs decoder-only cache families, not "
                 f"{cfg.family}")
-        if self._is_paged(caches):
-            chunk_fn = A.prefill_chunk_into_ring_cache \
-                if isinstance(caches.kv, A.PagedRingKVCache) \
-                else A.prefill_chunk_into_paged_cache
-        else:
-            chunk_fn = A.prefill_chunk_into_cache
         B, C = tokens.shape
         x = embed_lookup(params["embed"]["tokens"], tokens, self.dtype)
 
-        def body(carry, inp):
+        def chunk_fn_for(kv):
+            # per layer, not per stack: a mixed stack interleaves ring-paged
+            # and classic-paged layers inside one chunk dispatch
+            if isinstance(kv, A.PagedRingKVCache):
+                return A.prefill_chunk_into_ring_cache
+            if isinstance(kv, A.PagedKVCache):
+                return A.prefill_chunk_into_paged_cache
+            return A.prefill_chunk_into_cache
+
+        def body(carry, inp, window=None, rope_theta=None):
             h = carry
             lp, cache = inp
             fam = cfg.family
@@ -340,7 +430,7 @@ class Model:
                                                 cfg=cfg, n_new=n_new)
                 return h + y, new_cache._replace(ssm=sc)
             if fam == "hybrid":
-                att, kv = chunk_fn(
+                att, kv = chunk_fn_for(cache.kv)(
                     lp["attn"], hn, cache.kv, cfg=cfg, offsets=offsets,
                     n_new=n_new, shard_axis=shard_axis)
                 y, sc = T.S.mamba2_chunk_update(lp["ssm"], hn, cache.ssm,
@@ -349,9 +439,10 @@ class Model:
                                + y * lp["ssm_scale"].astype(h.dtype))
                 new_cache = new_cache._replace(kv=kv, ssm=sc)
             else:
-                att, kv = chunk_fn(
+                att, kv = chunk_fn_for(cache.kv)(
                     lp["attn"], hn, cache.kv, cfg=cfg, offsets=offsets,
-                    n_new=n_new, shard_axis=shard_axis)
+                    n_new=n_new, shard_axis=shard_axis, window=window,
+                    rope_theta=rope_theta)
                 h = h + att
                 new_cache = new_cache._replace(kv=kv)
             h2 = rms_norm(h, lp["norm2"])
@@ -367,8 +458,7 @@ class Model:
                 h = h + T.swiglu(lp["mlp"], h2, shard_axis)
             return h, new_cache
 
-        x, new_caches = T.scan_or_unroll(body, x, (params["layers"], caches),
-                                         cfg.scan_layers)
+        x, new_caches = self._run_layers(body, x, params["layers"], caches)
         idx = jnp.clip(n_new - 1, 0, C - 1).astype(jnp.int32)
         x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         x = rms_norm(x, params["final_norm"])
@@ -402,12 +492,11 @@ class Model:
             batch_axes=batch_axes, dense_backend=plan.decode_dense,
             paged_backend=plan.decode_paged,
             ring_backend=plan.decode_ring, ssm_backend=plan.ssm_scan,
-            live=live if paged else None, shard_axis=shard_axis)
+            live=live if paged else None, shard_axis=shard_axis,
+            layer_windows=self.layer_windows if self.hetero else None,
+            layer_thetas=self.layer_thetas if self.hetero else None)
         if live is not None and not paged:
-            def keep(new, old):
-                m = live.reshape((1, live.shape[0]) + (1,) * (new.ndim - 2))
-                return jnp.where(m, new, old)
-            new_caches = jax.tree.map(keep, new_caches, caches)
+            new_caches = self._keep_rows(new_caches, caches, live)
         x = rms_norm(x, params["final_norm"])
         logits = unembed(params["embed"]["tokens"], x)[:, 0]
         return logits, new_caches
@@ -434,9 +523,9 @@ class Model:
         plan = plan if plan is not None else self.kernel_plan
         if not CF.supports_spec(cfg):
             raise NotImplementedError(
-                "speculative verify needs a full-attention family (rollback "
-                f"rewinds the cache by position), not {cfg.family}"
-                + (" with a sliding window" if cfg.sliding_window else ""))
+                "speculative verify needs a uniform full-attention stack "
+                "(rollback rewinds the cache by position), not "
+                f"{CF.family_label(cfg)}")
         paged = self._is_paged(caches)
         B, K1 = tokens.shape
         base_live = (n_new > 0) if live is None else (live & (n_new > 0))
@@ -472,6 +561,11 @@ class Model:
         ring entries past keep_len are invalidated and the write pointer
         moves back; paged: a pure length truncation (the host-side pool
         frees strandable tail blocks separately)."""
+        if type(caches) is tuple:
+            raise NotImplementedError(
+                "heterogeneous per-layer caches have no rollback path; "
+                "supports_spec gates speculative decoding off for "
+                "layer-pattern stacks")
         kv = caches.kv
         if not hasattr(kv, "length") or caches.ssm != ():
             raise NotImplementedError(
@@ -495,20 +589,29 @@ class Model:
         length -> 0, SSM state/conv -> 0); stale K/V payloads are dead the
         moment no position points at them.
         """
+        lead = 1 if type(caches) is tuple else 2
+
         def clear(leaf, is_positions=False):
-            m = rows.reshape((1, rows.shape[0]) + (1,) * (leaf.ndim - 2))
+            m = rows.reshape((1,) * (lead - 1) + (rows.shape[0],)
+                             + (1,) * (leaf.ndim - lead))
             if is_positions:
                 return jnp.where(m, jnp.full_like(leaf, -1), leaf)
             return jnp.where(m, jnp.zeros_like(leaf), leaf)
 
-        kv = caches.kv
-        if hasattr(kv, "positions"):  # a KVCache, not the () placeholder
-            kv = kv._replace(positions=clear(kv.positions, is_positions=True),
-                             length=clear(kv.length))
-        ssm = caches.ssm
-        if ssm != ():
-            ssm = jax.tree.map(clear, ssm)
-        return caches._replace(kv=kv, ssm=ssm)
+        def reset_one(cache):
+            kv = cache.kv
+            if hasattr(kv, "positions"):  # a KVCache, not the () placeholder
+                kv = kv._replace(
+                    positions=clear(kv.positions, is_positions=True),
+                    length=clear(kv.length))
+            ssm = cache.ssm
+            if ssm != ():
+                ssm = jax.tree.map(clear, ssm)
+            return cache._replace(kv=kv, ssm=ssm)
+
+        if type(caches) is tuple:
+            return tuple(reset_one(c) for c in caches)
+        return reset_one(caches)
 
     # ------------------------------------------------------------ input specs
     def input_specs(self, shape: InputShape) -> dict[str, Any]:

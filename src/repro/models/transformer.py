@@ -14,6 +14,7 @@ for 48-layer × 512-device dry-runs).  Families:
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -84,8 +85,11 @@ def _cross_kv(p, enc_out):
 
 
 def decoder_layer(p, x, *, cfg, mesh=None, batch_axes=("data",),
-                  enc_out=None, causal: bool = True):
-    """x: (B, S, d) -> (y, aux_loss)."""
+                  enc_out=None, causal: bool = True,
+                  window: int | None = None,
+                  rope_theta: float | None = None):
+    """x: (B, S, d) -> (y, aux_loss).  ``window``/``rope_theta`` override
+    the config for one layer of a heterogeneous (layer-pattern) stack."""
     fam = cfg.family
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["norm1"])
@@ -98,7 +102,8 @@ def decoder_layer(p, x, *, cfg, mesh=None, batch_axes=("data",),
         x = x + S.mamba2_block(p["ssm"], h, cfg=cfg)
         return x, aux
     else:
-        x = x + A.attention_block(p["attn"], h, cfg=cfg, causal=causal)
+        x = x + A.attention_block(p["attn"], h, cfg=cfg, causal=causal,
+                                  window=window, rope_theta=rope_theta)
     if enc_out is not None:
         hc = rms_norm(x, p["norm_cross"])
         kv = _cross_kv(p["cross_attn"], enc_out)
@@ -148,8 +153,29 @@ def scan_or_unroll(body, carry, xs, use_scan: bool):
 
 
 def decoder_stack(stacked, x, *, cfg, mesh=None, batch_axes=("data",),
-                  enc_out=None, remat: bool | None = None):
+                  enc_out=None, remat: bool | None = None,
+                  layer_windows: tuple | None = None,
+                  layer_thetas: tuple | None = None):
     remat = cfg.remat if remat is None else remat
+
+    if layer_windows is not None or layer_thetas is not None:
+        # heterogeneous stack: per-layer window/theta are *static* mask and
+        # frequency parameters, so the loop must unroll — a scan would trace
+        # one body for all layers
+        n = len(layer_windows or layer_thetas)
+        auxs = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            lp = jax.tree.map(lambda a, i=i: a[i], stacked)
+            layer = partial(
+                decoder_layer, cfg=cfg, mesh=mesh, batch_axes=batch_axes,
+                enc_out=enc_out,
+                window=layer_windows[i] if layer_windows else None,
+                rope_theta=layer_thetas[i] if layer_thetas else None)
+            if remat:
+                layer = jax.checkpoint(layer)
+            x, aux = layer(lp, x)
+            auxs = auxs + aux
+        return x, auxs
 
     def body(carry, lp):
         y, aux = decoder_layer(lp, carry, cfg=cfg, mesh=mesh,
@@ -224,7 +250,9 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
                          paged_backend: str = "gather",
                          ring_backend: str = "gather",
                          ssm_backend: str = "xla", live=None,
-                         shard_axis: str | None = None):
+                         shard_axis: str | None = None,
+                         window: int | None = None,
+                         rope_theta: float | None = None):
     """One-token decode through one layer.  x: (B, 1, d).
 
     ``dense_backend`` / ``paged_backend`` are the attention sites of the
@@ -258,7 +286,9 @@ def decoder_layer_decode(p, x, cache: LayerCache, *, cfg, mesh=None,
                                            dense_backend=dense_backend,
                                            paged_backend=paged_backend,
                                            ring_backend=ring_backend,
-                                           live=live, shard_axis=shard_axis)
+                                           live=live, shard_axis=shard_axis,
+                                           window=window,
+                                           rope_theta=rope_theta)
         x = x + att
         new = new._replace(kv=kv)
     if cfg.is_encoder_decoder and not isinstance(cache.cross_k, tuple):
@@ -286,8 +316,29 @@ def decoder_stack_decode(stacked, x, caches, *, cfg, mesh=None, batch_axes=(),
                          paged_backend: str = "gather",
                          ring_backend: str = "gather",
                          ssm_backend: str = "xla", live=None,
-                         shard_axis: str | None = None):
-    """caches: LayerCache pytree with a leading layer axis on every leaf."""
+                         shard_axis: str | None = None,
+                         layer_windows: tuple | None = None,
+                         layer_thetas: tuple | None = None):
+    """caches: LayerCache pytree with a leading layer axis on every leaf —
+    or, for a heterogeneous stack (``layer_windows``/``layer_thetas``
+    given), a *tuple* of per-layer LayerCaches whose leaves may differ in
+    shape (per-layer cache widths/pools); the stack then unrolls and
+    returns a tuple of new caches."""
+
+    if layer_windows is not None or layer_thetas is not None:
+        n = len(layer_windows or layer_thetas)
+        new_caches = []
+        for i in range(n):
+            lp = jax.tree.map(lambda a, i=i: a[i], stacked)
+            x, nc = decoder_layer_decode(
+                lp, x, caches[i], cfg=cfg, mesh=mesh, batch_axes=batch_axes,
+                dense_backend=dense_backend, paged_backend=paged_backend,
+                ring_backend=ring_backend, ssm_backend=ssm_backend,
+                live=live, shard_axis=shard_axis,
+                window=layer_windows[i] if layer_windows else None,
+                rope_theta=layer_thetas[i] if layer_thetas else None)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
 
     def body(carry, inp):
         lp, cache = inp

@@ -59,7 +59,7 @@ from repro.core.pipeline import KernelPlan, StageTimer
 from repro.kernels.fused_sampler.ops import fused_sample, fused_sample_grid
 from repro.models import cache_family as CF
 
-from .kv_pool import KVBlockPool, PoolConfig
+from .kv_pool import KVBlockPool, MixedKVPool, PoolConfig
 from .sampling import SamplingParams, sample_token_grid, sample_tokens
 from .scheduler import (RequestState, Scheduler, SchedulerConfig, TickPlan,
                         serve_plan_graph)
@@ -219,7 +219,7 @@ class ServingEngine:
         self.eos_id = eos_id
         self.greedy = greedy
         self.kv = kv
-        self.pool: KVBlockPool | None = None
+        self.pool: KVBlockPool | MixedKVPool | None = None
         #: ring-window width (tokens) when the paged pool runs in ring
         #: mode — admission prices this, not the decode horizon
         self._kv_window = 0
@@ -258,6 +258,13 @@ class ServingEngine:
                 "mesh-sharded serving does not support constant-state "
                 f"(SSM/hybrid) families ({CF.family_label(cfg)}): the "
                 "concat-TP partition specs cover attention KV only")
+        if self.mesh_shards > 1 and getattr(cfg, "layer_pattern", ""):
+            # the shard_map cache specs (and the jit-cache key) assume one
+            # stacked homogeneous cache layout; per-layer tuples are not
+            # threaded through the concat-TP path
+            raise ValueError(
+                "mesh-sharded serving does not support heterogeneous "
+                f"(layer_pattern={cfg.layer_pattern!r}) cache stacks")
         auto_mode = prefill_mode is None
         if auto_mode:
             prefill_mode = ("chunked" if CF.supports_chunked_prefill(cfg)
@@ -297,9 +304,16 @@ class ServingEngine:
         self.scheduler.eos_id = None if eos_id < 0 else eos_id
         self.scheduler.chunk_supported = CF.supports_chunked_prefill(cfg)
         # dataflow-shape facts the serve_schedule pass prices: a sliding
-        # window bounds per-request KV, recurrent state doesn't grow at all
-        if cfg.sliding_window:
-            self.scheduler.kv_window = min(cfg.sliding_window, max_len)
+        # window bounds per-request KV, recurrent state doesn't grow at
+        # all, a mixed stack grows per layer kind.  Derived from the
+        # per-layer descriptors, NOT the raw cfg.sliding_window field — a
+        # family whose layers ignore the field (pure SSM with
+        # sliding_window set) must not make the planner price a phantom
+        # window.
+        plan_window = CF.kv_plan_window(cfg)
+        if plan_window:
+            self.scheduler.kv_window = min(plan_window, max_len)
+        self.scheduler.kv_mixed = CF.family_label(cfg) == "mixed"
         self.scheduler.constant_state = any(
             f.ssm for f in CF.layer_cache_families(cfg))
         # replans feed the observed acceptance rate through serve_schedule
@@ -323,6 +337,7 @@ class ServingEngine:
         # derivation the pass itself uses)
         self.scheduler.last_plan["kv_growth"] = (
             "constant" if self.scheduler.constant_state
+            else "mixed" if self.scheduler.kv_mixed
             else "window" if self.scheduler.kv_window else "linear")
         self._kernel_report = None  # PassReport when the plan was routed
         self.kernel_plan = self._resolve_kernel_plan(kernel_plan,
@@ -430,21 +445,28 @@ class ServingEngine:
         (``CF.paged_kind``): every slot's block table tiles the *window*,
         not the decode horizon, writes wrap in place, and admission is
         priced against window-sized leases — long-chat KV is O(window)
-        instead of O(seq)."""
+        instead of O(seq).  A heterogeneous (layer-pattern) stack runs
+        **mixed**: a :class:`MixedKVPool` leases a classic table for the
+        global layers and a ring table for the sliding layers per request,
+        so long-chat KV is O(window) on the sliding layers and O(seq) only
+        on the global ones."""
         cfg = self.model.cfg
         kind = CF.paged_kind(cfg)
         window = 0
-        if kind == "ring":
-            window = min(cfg.sliding_window, self.max_len)
+        if kind in ("ring", "mixed"):
+            window = min(CF.kv_plan_window(cfg), self.max_len)
             if self.scheduler.cfg.chunk > window:
                 raise ValueError(
-                    f"ring paged KV needs chunk "
+                    f"{kind} paged KV needs chunk "
                     f"({self.scheduler.cfg.chunk}) <= window ({window}): a "
                     "larger chunk would write the same ring slot twice in "
                     "one scatter")
-        # the token span one slot's block table must tile: the window in
-        # ring mode, the full decode horizon otherwise
-        horizon = window or self.max_len
+        # the token span one slot's *classic* block table must tile: the
+        # window in ring mode, the full decode horizon otherwise (mixed
+        # keeps the full horizon on its global layers; its ring table is
+        # sized separately below)
+        horizon = self.max_len if kind == "mixed" else (window or
+                                                        self.max_len)
         if block_size is None or pool_blocks is None:
             from repro.core import pipeline
             options = {"slots": self.slots, "max_len": self.max_len,
@@ -452,6 +474,8 @@ class ServingEngine:
                        "replan_every": self.scheduler.cfg.replan_every}
             if window:
                 options["sliding_window"] = window
+            if kind == "mixed":
+                options["kv_mixed"] = True
             if self.mesh_shards > 1:
                 options["mesh_shards"] = self.mesh_shards
             _, report = pipeline.optimize(
@@ -465,6 +489,7 @@ class ServingEngine:
                 block_size = int(plan["kv_block_size"])
                 fitting = [b for b in pipeline.SERVE_KV_BLOCK_SIZES
                            if horizon % b == 0
+                           and (not window or window % b == 0)
                            and b <= max(self.scheduler.cfg.chunk, 8)]
                 if fitting:
                     block_size = min(block_size, max(fitting))
@@ -476,21 +501,39 @@ class ServingEngine:
                 # block size differs from the planned one
                 pool_blocks = self.slots * (horizon // block_size)
         if horizon % block_size:
-            what = f"window {horizon}" if window \
+            what = f"window {horizon}" if window and kind != "mixed" \
                 else f"max_len {self.max_len}"
             raise ValueError(
                 f"{what} is not a multiple of the KV block size "
                 f"{block_size}: the block table must tile it exactly "
                 "(this is also what keeps paged and dense decode "
                 "bit-identical)")
+        if kind == "mixed" and window % block_size:
+            raise ValueError(
+                f"window {window} is not a multiple of the KV block size "
+                f"{block_size}: the ring block table must tile it exactly")
         max_blocks = horizon // block_size
         self._kv_window = window
-        self.pool = KVBlockPool(PoolConfig(
-            block_size=block_size, pool_blocks=pool_blocks,
-            max_blocks_per_seq=max_blocks, shards=self.mesh_shards))
-        self.caches = self.model.init_paged_caches(
-            self.slots, pool_blocks=pool_blocks, block_size=block_size,
-            max_blocks=max_blocks)
+        if kind == "mixed":
+            ring_max = window // block_size
+            ring_blocks = self.slots * ring_max
+            self.pool = MixedKVPool(
+                PoolConfig(block_size=block_size, pool_blocks=pool_blocks,
+                           max_blocks_per_seq=max_blocks),
+                PoolConfig(block_size=block_size, pool_blocks=ring_blocks,
+                           max_blocks_per_seq=ring_max),
+                window)
+            self.caches = self.model.init_paged_caches(
+                self.slots, pool_blocks=pool_blocks, block_size=block_size,
+                max_blocks=max_blocks, ring_pool_blocks=ring_blocks,
+                ring_max_blocks=ring_max)
+        else:
+            self.pool = KVBlockPool(PoolConfig(
+                block_size=block_size, pool_blocks=pool_blocks,
+                max_blocks_per_seq=max_blocks, shards=self.mesh_shards))
+            self.caches = self.model.init_paged_caches(
+                self.slots, pool_blocks=pool_blocks, block_size=block_size,
+                max_blocks=max_blocks)
         self.scheduler.kv_mode = "paged"
         self.scheduler.kv_window = window
         self.scheduler.kv_gate = self._kv_gate
@@ -605,6 +648,36 @@ class ServingEngine:
     def _admit(self, plan: TickPlan) -> None:
         if self.scheduler.cfg.prefill_mode == "chunked":
             if self.pool is not None:
+                if type(self.caches) is tuple:
+                    # layer-pattern stack: per-layer tables — under a
+                    # MixedKVPool the classic lease row goes on the
+                    # global layers and the ring lease row on the
+                    # sliding layers (a ring cache is the one carrying
+                    # per-slot positions); a homogeneous pattern shares
+                    # the single pool's table across every layer
+                    mixed_pool = isinstance(self.pool, MixedKVPool)
+                    new_caches = list(self.caches)
+                    for i, cache in enumerate(new_caches):
+                        kv = cache.kv
+                        ring = hasattr(kv, "positions")
+                        bt, ln = kv.block_tables, kv.length
+                        for sreq in plan.admissions:
+                            rid = sreq.req.rid
+                            row = jnp.asarray(
+                                self.pool.ring_block_table(rid)
+                                if ring and mixed_pool
+                                else self.pool.block_table(rid))
+                            bt = bt.at[sreq.slot].set(row)
+                            ln = ln.at[sreq.slot].set(sreq.pos)
+                        kv = kv._replace(block_tables=bt, length=ln)
+                        if ring:
+                            pos = kv.positions
+                            for sreq in plan.admissions:
+                                pos = pos.at[sreq.slot].set(-1)
+                            kv = kv._replace(positions=pos)
+                        new_caches[i] = cache._replace(kv=kv)
+                    self.caches = tuple(new_caches)
+                    return
                 # paged: point the admitted slots' block tables at their
                 # freshly leased blocks; length starts at the prefix-cache
                 # hit (those positions are already in shared blocks)
@@ -663,10 +736,12 @@ class ServingEngine:
         logits, fresh = self._prefill(self.params, batch)
         jax.block_until_ready(logits)
         slots_arr = jnp.asarray([s.slot for s in group], jnp.int32)
-        # splice the freshly prefilled rows into their slots' cache rows
-        self.caches = jax.tree.map(
-            lambda full, one: full.at[:, slots_arr].set(one),
-            self.caches, fresh)
+        # splice the freshly prefilled rows into their slots' cache rows;
+        # heterogeneous tuples' leaves are batch-major (no layer axis)
+        splice = (lambda full, one: full.at[slots_arr].set(one)) \
+            if type(self.caches) is tuple \
+            else (lambda full, one: full.at[:, slots_arr].set(one))
+        self.caches = jax.tree.map(splice, self.caches, fresh)
         toks_out = self._sample(logits, group)
         for i, sreq in enumerate(group):
             t = int(toks_out[i])

@@ -160,6 +160,11 @@ class Scheduler:
         #: pool's replanned geometry keeps pricing the *window* and the
         #: plan's ``kv_growth`` reflects the dataflow shape.
         self.kv_window = 0
+        #: heterogeneous (layer-pattern) stack mixing sliding and global
+        #: layers — forwarded so the plan's ``kv_growth`` reads "mixed"
+        #: (window layers constant past the window, global layers linear)
+        #: and a mixed paged engine's replans keep ring geometry fields.
+        self.kv_mixed = False
         #: engine's family carries recurrent (SSM/hybrid) state —
         #: forwarded so the plan prices constant-state decode.
         self.constant_state = False
@@ -420,6 +425,8 @@ class Scheduler:
             options["kv"] = self.kv_mode
         if self.kv_window:
             options["sliding_window"] = self.kv_window
+        if self.kv_mixed:
+            options["kv_mixed"] = True
         if self.constant_state:
             options["constant_state"] = True
         if self.mesh_shards > 1:

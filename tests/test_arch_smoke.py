@@ -109,6 +109,10 @@ def test_full_config_matches_assignment(arch):
                            qk_norm=True),
         "internlm2-20b": dict(n_layers=48, d_model=6144, n_heads=48,
                               n_kv_heads=8, d_ff=16384, vocab=92544),
+        "gemma3-1b": dict(n_layers=26, d_model=1152, n_heads=4,
+                          n_kv_heads=1, d_ff=6912, vocab=262144,
+                          head_dim=256, qk_norm=True, sliding_window=512,
+                          layer_pattern="SSSSSG"),
     }[arch]
     cfg = all_configs()[arch]
     for k, v in spec.items():

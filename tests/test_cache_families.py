@@ -1,0 +1,215 @@
+"""Unit tests for the per-layer cache-family descriptors
+(``repro.models.cache_family``) and the config predicates derived from
+them — the contract surface the serving stack dispatches through.
+
+These are the satellite lockdowns of the heterogeneous-stack issue:
+
+* ``ModelConfig.sub_quadratic`` is *derived from the descriptors* (true
+  iff no layer holds a full KV cache), table-driven over every family
+  including layer-pattern stacks;
+* the planner prices the window the *descriptors* declare, never the raw
+  ``sliding_window`` field — a pure-SSM config with the field set must
+  not make the scheduler price a phantom window;
+* the ``*_of(fams)`` predicate forms answer (or raise) explicitly for
+  hand-built heterogeneous tuples instead of any/all-guessing;
+* per-layer RoPE thetas: sliding layers rotate with the local theta,
+  global layers with the global one, each falling back to
+  ``cfg.rope_theta``.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs.base import ModelConfig, all_configs
+from repro.models import cache_family as CF
+from repro.models.cache_family import CacheFamily
+
+TINY = ModelConfig(name="cf-tiny", family="dense", n_layers=4, d_model=64,
+                   vocab=96, n_heads=4, n_kv_heads=2, d_ff=128,
+                   dtype="float32", param_dtype="float32")
+
+
+def _cfg(**kw):
+    return dataclasses.replace(TINY, **kw)
+
+
+# -- sub_quadratic: derived from the descriptors, table-driven ---------------
+
+@pytest.mark.parametrize("kw,expected", [
+    # one row per dataflow family; expected == "no layer holds full KV"
+    (dict(), False),                                       # dense full
+    (dict(sliding_window=16), True),                       # dense sliding
+    (dict(family="ssm", n_heads=0, n_kv_heads=0,           # pure SSM
+          ssm_state=8, ssm_head_dim=16), True),
+    (dict(family="hybrid", ssm_state=8, ssm_head_dim=16,
+          sliding_window=16), True),                       # hybrid, windowed
+    (dict(family="hybrid", ssm_state=8, ssm_head_dim=16), False),
+    # ^ hybrid with full-attention KV alongside the SSM state still grows
+    (dict(sliding_window=16, layer_pattern="SS"), True),   # all-sliding pat.
+    (dict(layer_pattern="G"), False),                      # all-global pat.
+    (dict(sliding_window=16, layer_pattern="SG"), False),
+    # ^ the mixed stack's global layers keep decode memory linear
+])
+def test_sub_quadratic_table(kw, expected):
+    cfg = _cfg(**kw)
+    assert cfg.sub_quadratic is expected, (kw, cfg.sub_quadratic)
+    # the property must agree with the descriptors it claims to derive from
+    assert cfg.sub_quadratic == all(
+        f.kv != "full" for f in CF.layer_cache_families(cfg))
+
+
+# -- kv_plan_window: descriptors, not the raw config field ------------------
+
+def test_kv_plan_window_ignores_phantom_field_on_ssm():
+    """The planner-input regression: a pure-SSM config with
+    ``sliding_window`` set has no sliding *layer*, so the scheduler must
+    not price a window-bounded KV pool for it."""
+    ssm = _cfg(family="ssm", n_heads=0, n_kv_heads=0, ssm_state=8,
+               ssm_head_dim=16, sliding_window=16)
+    assert ssm.sliding_window == 16          # the field is set ...
+    assert CF.kv_plan_window(ssm) == 0       # ... but no layer slides
+
+
+def test_kv_plan_window_per_family():
+    assert CF.kv_plan_window(TINY) == 0
+    assert CF.kv_plan_window(_cfg(sliding_window=16)) == 16
+    assert CF.kv_plan_window(_cfg(family="hybrid", ssm_state=8,
+                                  ssm_head_dim=16, sliding_window=16)) == 16
+    assert CF.kv_plan_window(_cfg(sliding_window=16,
+                                  layer_pattern="SG")) == 16
+    assert CF.kv_plan_window(_cfg(layer_pattern="G")) == 0
+
+
+def test_engine_prices_descriptor_window_not_config_field():
+    """End-to-end planner input: an SSM engine with the phantom field set
+    keeps ``kv_window == 0`` and plans constant-state growth, while a
+    sliding engine prices its real window."""
+    import jax
+
+    from repro.models.model import Model
+    from repro.serving import ServingEngine
+
+    ssm_cfg = dataclasses.replace(
+        TINY, name="cf-ssm", family="ssm", n_layers=2, n_heads=0,
+        n_kv_heads=0, ssm_state=8, ssm_head_dim=16, ssm_chunk=4,
+        sliding_window=16)
+    m = Model(ssm_cfg)
+    eng = ServingEngine(m, m.init(jax.random.key(0)), slots=2, max_len=32,
+                        chunk=4, prefill_mode="chunked")
+    assert eng.scheduler.kv_window == 0
+    assert eng.scheduler.last_plan["kv_growth"] == "constant"
+
+
+# -- the *_of predicate forms on hand-built descriptor tuples ----------------
+
+FULL = CacheFamily(kv="full")
+SLIDE = CacheFamily(kv="sliding", window=16)
+SSM = CacheFamily(kv="none", ssm=True)
+HYB = CacheFamily(kv="sliding", window=16, ssm=True)
+
+
+def test_paged_kind_of_explicit_per_tuple():
+    assert CF.paged_kind_of((FULL, FULL)) == "paged"
+    assert CF.paged_kind_of((SLIDE, SLIDE)) == "ring"
+    assert CF.paged_kind_of((SLIDE, FULL)) == "mixed"
+    assert CF.paged_kind_of((FULL, SLIDE, FULL)) == "mixed"
+
+
+def test_paged_kind_of_raises_for_unpageable_tuples():
+    """No guessing: tuples no block pool serves must raise, not collapse
+    onto whichever layout an any() would hit first."""
+    for fams in ((SSM, SSM), (HYB, HYB), (FULL, SSM), (SLIDE, HYB), ()):
+        with pytest.raises(ValueError, match="no paged-pool layout"):
+            CF.paged_kind_of(fams)
+
+
+def test_supports_spec_of_uniform_full_only():
+    assert CF.supports_spec_of((FULL, FULL))
+    assert not CF.supports_spec_of((SLIDE, SLIDE))
+    assert not CF.supports_spec_of((SLIDE, FULL))   # mixed: explicit no
+    assert not CF.supports_spec_of((FULL, HYB))
+    assert not CF.supports_spec_of((SSM, SSM))
+    assert not CF.supports_spec_of(())
+
+
+def test_supports_spec_rejects_every_pattern_config():
+    """Even an all-'G' pattern runs the tuple-cache (unrolled) path, which
+    has no rollback implementation — the config form must gate it off
+    while the descriptor form stays descriptor-pure."""
+    all_g = _cfg(layer_pattern="G")
+    assert CF.supports_spec_of(CF.layer_cache_families(all_g))
+    assert not CF.supports_spec(all_g)
+    assert not CF.supports_spec(_cfg(sliding_window=16, layer_pattern="SG"))
+    assert CF.supports_spec(TINY)
+
+
+def test_family_label_of_mixed_tuples():
+    assert CF.family_label_of((FULL, FULL)) == "full"
+    assert CF.family_label_of((SLIDE, SLIDE)) == "sliding"
+    assert CF.family_label_of((SLIDE, FULL)) == "mixed"
+    assert CF.family_label_of((FULL, SLIDE)) == "mixed"
+    assert CF.family_label_of((SSM, SSM)) == "ssm"
+    assert CF.family_label_of((HYB, HYB)) == "hybrid"
+
+
+# -- pattern expansion and validation ----------------------------------------
+
+def test_pattern_expands_repeating_over_stack():
+    cfg = _cfg(sliding_window=16, layer_pattern="SG", n_layers=5)
+    fams = CF.layer_cache_families(cfg)
+    assert [f.kv for f in fams] == \
+        ["sliding", "full", "sliding", "full", "sliding"]
+    assert CF.layer_windows(cfg) == (16, 0, 16, 0, 16)
+
+
+def test_pattern_validation_errors():
+    with pytest.raises(ValueError, match="unknown layer kinds"):
+        CF.layer_cache_families(_cfg(sliding_window=16, layer_pattern="SGX"))
+    with pytest.raises(ValueError, match="sliding_window == 0"):
+        CF.layer_cache_families(_cfg(layer_pattern="SG"))
+    with pytest.raises(ValueError, match="decoder-only attention"):
+        CF.layer_cache_families(_cfg(family="ssm", ssm_state=8,
+                                     ssm_head_dim=16, sliding_window=16,
+                                     layer_pattern="SG"))
+
+
+# -- per-layer RoPE thetas ----------------------------------------------------
+
+def test_layer_rope_thetas_local_global_split():
+    cfg = _cfg(sliding_window=16, layer_pattern="SG", n_layers=4,
+               rope_theta=10_000.0, rope_theta_local=5_000.0,
+               rope_theta_global=1_000_000.0)
+    assert CF.layer_rope_thetas(cfg) == \
+        (5_000.0, 1_000_000.0, 5_000.0, 1_000_000.0)
+
+
+def test_layer_rope_thetas_fall_back_to_rope_theta():
+    """Unset local/global thetas (0.0) mean every layer keeps the single
+    theta homogeneous configs always used — including sliding layers."""
+    cfg = _cfg(sliding_window=16, layer_pattern="SG", n_layers=2,
+               rope_theta=10_000.0)
+    assert CF.layer_rope_thetas(cfg) == (10_000.0, 10_000.0)
+    only_local = _cfg(sliding_window=16, layer_pattern="SG", n_layers=2,
+                      rope_theta=10_000.0, rope_theta_local=5_000.0)
+    assert CF.layer_rope_thetas(only_local) == (5_000.0, 10_000.0)
+
+
+# -- the shipped heterogeneous config -----------------------------------------
+
+def test_gemma3_descriptors():
+    """The gemma3-style config really is a 5:1 sliding:global stack with
+    split thetas, and its reduced() variant keeps the pattern mixed."""
+    cfg = all_configs()["gemma3-1b"]
+    fams = CF.layer_cache_families(cfg)
+    assert len(fams) == 26
+    assert [f.kv for f in fams[:6]] == ["sliding"] * 5 + ["full"]
+    assert CF.paged_kind(cfg) == "mixed"
+    assert CF.family_label(cfg) == "mixed"
+    assert not CF.supports_spec(cfg)
+    assert cfg.rope_theta_local == 10_000.0
+    assert cfg.rope_theta_global == 1_000_000.0
+
+    red = cfg.reduced()
+    assert red.n_layers == 2
+    assert CF.paged_kind(red) == "mixed"   # the pattern survives reduction
+    assert CF.kv_plan_window(red) == red.sliding_window > 0

@@ -224,6 +224,7 @@ def assert_equivalent(model, params, trace: Trace, draft=None) -> None:
 
 # -- the randomized sweeps (run in every environment) -------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", range(N_GREEDY))
 def test_greedy_trace_equivalence(fuzz_model, seed):
     """Greedy outputs bit-identical across paged/dense engines and their
@@ -232,6 +233,7 @@ def test_greedy_trace_equivalence(fuzz_model, seed):
     assert_equivalent(model, params, make_trace(seed, sampled=False))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", range(10_000, 10_000 + N_SAMPLED))
 def test_sampled_trace_equivalence(fuzz_model, seed):
     """Seeded sampled streams identical across paged/dense engines and
@@ -254,6 +256,7 @@ def test_sampled_trace_equivalence(fuzz_model, seed):
 N_PLAN = max(N_GREEDY // 7, 2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("sampled", [False, True])
 @pytest.mark.parametrize("seed", range(30_000, 30_000 + N_PLAN))
 def test_kernel_plan_replay_matches_seed_path(fuzz_model, seed, sampled):
@@ -293,6 +296,7 @@ def test_auto_plan_actually_routes(fuzz_model):
 N_DRAFT = max(N_GREEDY // 7, 2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("seed", range(20_000, 20_000 + N_DRAFT))
 def test_draft_model_trace_equivalence(fuzz_model, draft_model, seed):
     """Draft-model speculation: outputs bit-identical to the plain dense
@@ -313,6 +317,7 @@ if HAVE_HYPOTHESIS:
         suppress_health_check=[HealthCheck.too_slow,
                                HealthCheck.function_scoped_fixture])
 
+    @pytest.mark.slow
     @_HYP
     @given(seed=st.integers(0, 2**31 - 1), sampled=st.booleans())
     def test_hypothesis_trace_equivalence(fuzz_model, seed, sampled):
@@ -589,6 +594,7 @@ def test_mixed_per_request_spec_matches_baseline(fuzz_model):
 # equality against the in-process single-device streams — both KV layouts,
 # greedy and seeded sampled, speculation on and off.
 
+@pytest.mark.slow
 def test_sharded_engine_matches_single_device(fuzz_model):
     """2-shard concat-TP engine emits streams bit-identical to the
     single-device engine: dense + paged KV, greedy + sampled traces,
@@ -697,6 +703,7 @@ def hybrid_model():
     return m, m.init(jax.random.key(0))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("sampled", [False, True])
 @pytest.mark.parametrize("seed", range(40_000, 40_000 + N_FAMILY))
 def test_sliding_ring_trace_equivalence(swa_model, seed, sampled):
@@ -806,6 +813,7 @@ def test_ring_pool_is_window_sized(swa_model):
     assert eng.pool.stats()["blocks_in_use"] == 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("family_fixture", ["ssm_model", "hybrid_model"])
 @pytest.mark.parametrize("sampled", [False, True])
 @pytest.mark.parametrize("seed", range(50_000, 50_000 + N_FAMILY))
@@ -863,3 +871,163 @@ def test_spec_rejected_for_non_full_families(swa_model, ssm_model):
         with pytest.raises(ValueError,
                            match="request 7: speculative decoding"):
             eng.submit(req)
+
+
+# -- the heterogeneous-stack tier: mixed sliding+global layers ----------------
+#
+# A ``layer_pattern`` config unrolls the stack per layer: sliding layers
+# hold window-sized ring caches rotated with ``rope_theta_local``, global
+# layers full-horizon caches, and the paged engine leases *both* table
+# kinds per request from the composed classic+ring pool
+# (``kv_pool.MixedKVPool``).  The hetero path is Python-unrolled, so its
+# bitwise references are the homogeneous engines pinned to the unrolled
+# path (``scan_layers=False``) — scan-vs-unroll XLA fusion reorders float
+# ops at ~1e-6, which would smear a bit-equality oracle.  Three oracles:
+#
+# * while context <= window, a mixed stack == the all-full stack (same
+#   key(0) params — the window mask and the local theta are the only
+#   differences, and neither bites inside the window when
+#   ``rope_theta_local`` is unset);
+# * an all-'S' pattern == the legacy homogeneous sliding engine on traces
+#   that run *past* the window — the per-layer tuple path computes the
+#   same dataflow the stacked ring path does, dense and ring-paged;
+# * mixed paged == mixed dense on full fuzzed traces (gaps, priorities,
+#   preemption, EOS, gated admission), greedy and seeded sampled, with
+#   the composed pool's invariants re-derived every tick.
+
+MIXED_CFG = dataclasses.replace(CFG, name="fuzz-mixed",
+                                sliding_window=WINDOW, layer_pattern="SG")
+#: homogeneous references pinned to the unrolled (bitwise-comparable) path
+FULL_UNROLLED_CFG = dataclasses.replace(CFG, name="fuzz-full-unrolled",
+                                        scan_layers=False)
+SWA_UNROLLED_CFG = dataclasses.replace(SWA_CFG, name="fuzz-swa-unrolled",
+                                       scan_layers=False)
+#: all-sliding *pattern* config: the same dataflow as SWA_CFG, but served
+#: through the heterogeneous per-layer path (tuple caches, ring tables)
+PATTERN_SWA_CFG = dataclasses.replace(CFG, name="fuzz-swa-pattern",
+                                      sliding_window=WINDOW,
+                                      layer_pattern="SS")
+
+
+@pytest.fixture(scope="module")
+def mixed_model():
+    m = Model(MIXED_CFG)
+    return m, m.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def full_unrolled_model():
+    m = Model(FULL_UNROLLED_CFG)
+    return m, m.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def swa_unrolled_model():
+    m = Model(SWA_UNROLLED_CFG)
+    return m, m.init(jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def pattern_swa_model():
+    m = Model(PATTERN_SWA_CFG)
+    return m, m.init(jax.random.key(0))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_mixed_matches_full_attention_within_window(mixed_model,
+                                                    full_unrolled_model,
+                                                    seed):
+    """The ISSUE's lockdown oracle, heterogeneous edition: while every
+    request's context fits the window, the mixed stack's sliding layers
+    see exactly the history its global layers see, so the streams must
+    equal the all-full engine's bit for bit — dense and mixed-paged."""
+    mixed_m, mixed_p = mixed_model
+    full_m, full_p = full_unrolled_model
+    trace = _within_window_trace(seed)
+    full = run_trace(full_m, full_p, trace, "dense")
+    assert run_trace(mixed_m, mixed_p, trace, "dense") == full, (
+        "dense mixed stack diverged from full attention inside the window")
+    assert run_trace(mixed_m, mixed_p, trace, "paged") == full, (
+        "mixed-paged stack diverged from full attention inside the window")
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_pattern_sliding_matches_legacy_sliding_past_window(
+        pattern_swa_model, swa_unrolled_model, seed):
+    """An all-'S' pattern is the legacy sliding engine computed through
+    the per-layer tuple path: on traces whose contexts run past the
+    window (prompts up to 20 tokens plus decode vs window 16) the
+    streams must match bit for bit, dense and ring-paged."""
+    pat_m, pat_p = pattern_swa_model
+    swa_m, swa_p = swa_unrolled_model
+    trace = make_trace(seed, sampled=bool(seed % 2))
+    legacy = run_trace(swa_m, swa_p, trace, "dense")
+    assert run_trace(pat_m, pat_p, trace, "dense") == legacy, (
+        "dense pattern-'SS' stack diverged from the legacy sliding engine")
+    assert run_trace(pat_m, pat_p, trace, "paged") == legacy, (
+        "ring-paged pattern-'SS' stack diverged from the legacy sliding "
+        "engine")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sampled", [False, True])
+@pytest.mark.parametrize("seed", range(70_000, 70_000 + N_FAMILY))
+def test_mixed_trace_equivalence(mixed_model, seed, sampled):
+    """Mixed-paged engine (classic + ring leases per request) == mixed
+    dense engine, bit for bit, on full fuzzed traces — arrival gaps,
+    priorities/preemption, block-gated admission and EOS included, the
+    composed pool's invariants re-derived every tick."""
+    model, params = mixed_model
+    trace = make_trace(seed, sampled=sampled)
+    dense = run_trace(model, params, trace, "dense")
+    paged = run_trace(model, params, trace, "paged")
+    assert paged == dense, (
+        f"mixed paged/dense divergence: dense={dense} paged={paged}")
+
+
+def test_mixed_pool_leases_both_kinds(mixed_model):
+    """The composed pool's observable shape: the engine reports kind
+    ``"mixed"`` with nested classic/ring stats, a decoding request holds
+    a full-horizon classic lease *and* a window-sized ring lease, prefix
+    sharing is disabled (``tokens_saved`` stays 0 — ring layers need
+    per-request KV), and everything drains to zero."""
+    model, params = mixed_model
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked", kv="paged",
+                        kv_block_size=BLOCK)
+    assert eng.stats()["kv_window"] == WINDOW
+    assert eng.pool.stats()["kind"] == "mixed"
+    rng = np.random.default_rng(5)
+    req = Request(rid=0, prompt=rng.integers(0, CFG.vocab, 20)
+                  .astype(np.int32), max_new_tokens=8)
+    eng.submit(req)  # horizon 28 <= max_len 32: classic lease fits
+    eng.step()
+    st = eng.pool.stats()
+    # ring side: exactly window // block_size blocks, in place for good
+    assert st["ring"]["blocks_in_use"] == WINDOW // BLOCK
+    # classic side: blocks for the 28-token horizon appear as prefill runs
+    assert st["classic"]["blocks_in_use"] >= 1
+    eng.run()
+    assert req.done and len(req.generated) == 8
+    assert eng.pool.tokens_saved == 0
+    st = eng.pool.stats()
+    assert st["blocks_in_use"] == 0
+    assert st["classic"]["blocks_in_use"] == 0
+    assert st["ring"]["blocks_in_use"] == 0
+
+
+def test_spec_rejected_for_pattern_stacks(mixed_model):
+    """Tuple caches have no rollback path, so speculative decoding must
+    fail loudly for *every* layer-pattern stack — mixed or homogeneous —
+    at engine construction and at per-request submit."""
+    model, params = mixed_model
+    with pytest.raises(ValueError, match="speculative decoding"):
+        ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                      chunk=CHUNK, prefill_mode="chunked",
+                      spec=SpecParams(mode="ngram", k=2))
+    eng = ServingEngine(model, params, slots=SLOTS, max_len=MAX_LEN,
+                        chunk=CHUNK, prefill_mode="chunked")
+    req = Request(rid=7, prompt=np.arange(4, dtype=np.int32),
+                  max_new_tokens=2, spec=SpecParams(mode="ngram", k=2))
+    with pytest.raises(ValueError, match="request 7: speculative decoding"):
+        eng.submit(req)
